@@ -1,0 +1,68 @@
+"""Summarize dry-run artifacts into the §Roofline table (deliverable (g)).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+        [--tag baseline] [--mesh pod16x16] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_rows(d: Path, tag: str, mesh: str):
+    rows = []
+    for p in sorted(d.glob(f"{tag}__*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec.get("status"),
+                         "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute": r["t_compute_s"], "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"], "bottleneck": r["bottleneck"],
+            "useful": r["useful_flops_ratio"],
+            "mem_temp": (rec.get("memory_analysis") or {}).get(
+                "temp_size_in_bytes"),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(Path(args.dir), args.tag, args.mesh)
+    if args.markdown:
+        print("| arch | shape | t_compute | t_memory | t_collective | "
+              "bottleneck | useful_flops |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']}: {r['reason'][:60]} | — |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+                      f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+                      f"**{r['bottleneck']}** | {r['useful']:.2f} |")
+    else:
+        print("arch,shape,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+              "useful_flops_ratio")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},,,,{r['status']},")
+            else:
+                print(f"{r['arch']},{r['shape']},{r['t_compute']:.4e},"
+                      f"{r['t_memory']:.4e},{r['t_collective']:.4e},"
+                      f"{r['bottleneck']},{r['useful']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

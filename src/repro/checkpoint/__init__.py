@@ -1,0 +1,3 @@
+from .store import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,65 @@
+"""Assigned-architecture configs + dry-run input specs.
+
+``input_specs(cfg, shape, mesh, plan)`` returns ShapeDtypeStruct stand-ins for
+every input of the step function selected by the shape's kind — weak-type
+correct, shardable, zero allocation (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Family, InputShape, ModelConfig, ParallelPlan
+from repro.core.registry import ARCH_IDS, all_configs, get_config, get_smoke_config
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == Family.AUDIO:
+        specs["frames"] = SDS((b, cfg.enc_frames, cfg.d_model), jnp.float32)
+    if cfg.family == Family.VLM and cfg.vision_tokens:
+        specs["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model), jnp.float32)
+        specs["vision_pos"] = SDS((b, cfg.vision_tokens), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    del specs["labels"]
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, model) -> Dict[str, Any]:
+    """Specs for decode_step(params, cache, tokens, pos)."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "cache": cache,
+        "tokens": SDS((b,), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model=None) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    assert model is not None, "decode specs need the model (cache shapes)"
+    return decode_input_specs(cfg, shape, model)
+
+
+__all__ = [
+    "ARCH_IDS", "all_configs", "get_config", "get_smoke_config",
+    "input_specs", "train_input_specs", "prefill_input_specs",
+    "decode_input_specs",
+]

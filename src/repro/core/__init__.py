@@ -1,0 +1,36 @@
+"""Core library: the survey's technique taxonomy as composable JAX features.
+
+- config.py    ModelConfig / ParallelPlan / assigned input shapes
+- sharding.py  GSPMD sharding-rule engine (TP / FSDP-factor / EP / vocab / ZeRO)
+- registry.py  ``--arch <id>`` resolution for the 10 assigned architectures
+"""
+
+from .config import (
+    Family,
+    InputShape,
+    INPUT_SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    MoEConfig,
+    ParallelPlan,
+    SSMConfig,
+)
+from .registry import ARCH_IDS, all_configs, get_config, get_smoke_config, register
+from . import sharding
+
+__all__ = [
+    "Family",
+    "InputShape",
+    "INPUT_SHAPES",
+    "SHAPES_BY_NAME",
+    "ModelConfig",
+    "MoEConfig",
+    "ParallelPlan",
+    "SSMConfig",
+    "ARCH_IDS",
+    "all_configs",
+    "get_config",
+    "get_smoke_config",
+    "register",
+    "sharding",
+]

@@ -1,0 +1,4 @@
+from .anomaly import Anomaly, Monitor
+from .recovery import RunReport, run_with_recovery
+
+__all__ = ["Anomaly", "Monitor", "RunReport", "run_with_recovery"]

@@ -1,0 +1,79 @@
+"""Anomaly detection (survey §8.2) — statistical monitoring of a training run.
+
+Three detectors feed a :class:`Monitor`:
+
+- **NaN/Inf** in loss or grad-norm (model instability / numerical failure);
+- **loss spike**: loss > running-median + k·MAD over a trailing window
+  (the classic loss-spike symptom of data corruption or bad restarts);
+- **straggler / hang**: a heartbeat watchdog — step wall-times exceeding
+  ``hang_factor ×`` the trailing median flag a slow/hung worker (survey §8.1:
+  stragglers silently degrade MFU long before anything crashes).
+
+The monitor only *detects*; recovery policy lives in ``repro.ft.recovery``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+
+@dataclasses.dataclass
+class Anomaly:
+    kind: str          # "nan" | "spike" | "hang"
+    step: int
+    detail: str
+
+
+class Monitor:
+    def __init__(self, window: int = 32, spike_mads: float = 10.0,
+                 hang_factor: float = 5.0, min_history: int = 8):
+        self.window = window
+        self.spike_mads = spike_mads
+        self.hang_factor = hang_factor
+        self.min_history = min_history
+        self.losses: Deque[float] = deque(maxlen=window)
+        self.times: Deque[float] = deque(maxlen=window)
+        self.anomalies: List[Anomaly] = []
+        self._last_beat: Optional[float] = None
+
+    @staticmethod
+    def _median(xs) -> float:
+        s = sorted(xs)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def record(self, step: int, loss: float, grad_norm: float,
+               now: Optional[float] = None) -> Optional[Anomaly]:
+        """Feed one step's metrics; returns an Anomaly if detected."""
+        now = time.time() if now is None else now
+        out: Optional[Anomaly] = None
+
+        if not math.isfinite(loss) or not math.isfinite(grad_norm):
+            out = Anomaly("nan", step,
+                          f"loss={loss} grad_norm={grad_norm}")
+        elif len(self.losses) >= self.min_history:
+            med = self._median(self.losses)
+            mad = self._median([abs(l - med) for l in self.losses]) + 1e-12
+            if loss > med + self.spike_mads * mad and loss > med * 1.5:
+                out = Anomaly("spike", step,
+                              f"loss={loss:.4f} median={med:.4f} mad={mad:.4f}")
+
+        if self._last_beat is not None:
+            dt = now - self._last_beat
+            if len(self.times) >= self.min_history:
+                med_t = self._median(self.times)
+                if dt > self.hang_factor * med_t and dt > 1e-3:
+                    out = out or Anomaly(
+                        "hang", step, f"step_time={dt:.3f}s median={med_t:.3f}s")
+            self.times.append(dt)
+        self._last_beat = now
+
+        if out is None and math.isfinite(loss):
+            self.losses.append(loss)     # only healthy points enter the window
+        if out:
+            self.anomalies.append(out)
+        return out

@@ -1,0 +1,74 @@
+"""Checkpoint-based recovery driver (survey §8.3): wraps a training loop with
+detect -> rollback -> replay semantics.
+
+On an anomaly the driver restores the latest checkpoint and *replays* from the
+restored step. The deterministic data pipeline (batch = f(arch, step)) makes
+replay bit-faithful — the property test in tests/test_ft.py asserts the
+recovered run matches an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint.store import CheckpointManager
+from .anomaly import Anomaly, Monitor
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int
+    anomalies: List[Anomaly]
+    restores: int
+    losses: List[float]
+
+
+def run_with_recovery(
+    state: Any,
+    train_step: Callable[[Any, Dict], Tuple[Any, Dict]],
+    get_batch: Callable[[int], Dict],
+    n_steps: int,
+    ckpt: CheckpointManager,
+    monitor: Optional[Monitor] = None,
+    ckpt_every: int = 10,
+    max_restores: int = 3,
+    fault_injector: Optional[Callable[[int, Any], Any]] = None,
+) -> Tuple[Any, RunReport]:
+    """Run ``n_steps`` with periodic checkpointing and anomaly-driven rollback.
+
+    ``fault_injector(step, state) -> state`` lets tests corrupt the run.
+    """
+    monitor = monitor or Monitor()
+    losses: List[float] = []
+    restores = 0
+    step = 0
+    ckpt.save(step, state, blocking=True)
+
+    while step < n_steps:
+        cur = state
+        if fault_injector is not None:
+            cur = fault_injector(step, cur)
+        new_state, metrics = train_step(cur, get_batch(step))
+        loss = float(metrics["loss"])
+        gnorm = float(metrics.get("grad_norm", 0.0))
+        anomaly = monitor.record(step, loss, gnorm)
+
+        if anomaly is not None and anomaly.kind in ("nan", "spike"):
+            if restores >= max_restores:
+                raise RuntimeError(
+                    f"giving up after {restores} restores: {anomaly}")
+            restore_step, state = ckpt.restore(state)
+            step = restore_step
+            restores += 1
+            del losses[restore_step:]
+            continue
+
+        state = new_state
+        losses.append(loss)
+        step += 1
+        if step % ckpt_every == 0:
+            ckpt.save(step, state)
+
+    ckpt.wait()
+    return state, RunReport(step, monitor.anomalies, restores, losses)

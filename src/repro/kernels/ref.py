@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_direct
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale: Optional[float] = None):
+    """(B, Hq, S, hd) layout oracle (kernels use head-major layout)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = attention_direct(qt, kt, vt, causal=causal, window=window,
+                           softcap=softcap, scale=scale)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def expert_gemm_ref(x, w):
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f) batched per-expert GEMM."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, B, C, chunk):
+    from repro.models.ssm import ssd_scan
+    return ssd_scan(x, dt, A, B, C, chunk)

@@ -1,0 +1,125 @@
+"""Mamba2 SSD chunk scan — fused Pallas TPU kernel.
+
+§Perf pair B localized mamba2/zamba2's residual memory term to the SSD
+intra-chunk intermediates: the pure-JAX ``ssd_scan`` materializes per-chunk
+decay matrices ``L = exp(segsum(dA))`` of shape (b, c, h, q, q) plus carried
+states to HBM every layer and every pass. This kernel fuses the whole chunk
+pipeline — decay computation, intra-chunk "attention" (C·Bᵀ ∘ L)·x, carried-
+state contribution, and the inter-chunk state recurrence — so only x/dt/B/C
+stream in and y streams out; L and the running state never leave VMEM.
+
+Layout (TPU adaptation — same pattern as flash_attention.py):
+
+- grid = (batch, heads, n_chunks) with the chunk dim minor: the (p, n) running
+  state lives in VMEM scratch across chunk steps (the recurrence the GPU
+  implementation does with a separate kernel launch + global memory round
+  trip).
+- B/C are per-group; the index_map maps head -> group (h // heads_per_group),
+  so grouped state projections are never repeated in HBM.
+- VMEM working set per step ≈ x(q·p) + B,C(q·n) + L(q·q) + state(p·n)
+  ≈ 128·(64+128+128+128)·4 ≈ 230 KB — far under budget, with q=chunk=128
+  MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (q, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (q,)
+    a = a_ref[0]                                  # scalar A (negative)
+    bmat = b_ref[0, 0].astype(jnp.float32)       # (q, n)
+    cmat = c_ref[0, 0].astype(jnp.float32)       # (q, n)
+
+    xd = x * dt[:, None]
+    da = dt * a                                   # (q,) log-decays
+    cs = jnp.cumsum(da)                           # (q,)
+
+    # intra-chunk decay kernel: L[i, j] = exp(cs[i] - cs[j]) for i >= j
+    q = cs.shape[0]
+    li = cs[:, None] - cs[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot(scores, xd, preferred_element_type=jnp.float32)
+
+    # carried-state contribution: y += exp(cs) * C @ state  (state: (p, n))
+    state = state_ref[...]
+    y = y + jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        cmat, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state recurrence: state' = exp(cs[-1])·state + Σ_q exp(cs[-1]-cs)·xdᵀB
+    decay_states = jnp.exp(cs[-1] - cs)           # (q,)
+    state_new = (state * jnp.exp(cs[-1])
+                 + jax.lax.dot_general(xd * decay_states[:, None], bmat,
+                                       (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32))
+    state_ref[...] = state_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_new.astype(state_out_ref.dtype)
+
+
+def ssd_chunk_scan(
+    x: jax.Array,        # (B, H, L, P)
+    dt: jax.Array,       # (B, H, L)
+    A: jax.Array,        # (H,) negative decay rates
+    Bm: jax.Array,       # (B, G, L, N)
+    Cm: jax.Array,       # (B, G, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (B, H, L, P) fp32, final_state (B, H, P, N) fp32)."""
+    b, h, l, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    assert h % g == 0
+    hpg = h // g
+    nc = l // chunk
+    grid = (b, h, nc)
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, g_=hpg: (bi, hi // g_, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, g_=hpg: (bi, hi // g_, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return y, state

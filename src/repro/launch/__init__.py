@@ -1,0 +1,3 @@
+from .mesh import batch_axes_for, make_local_mesh, make_production_mesh
+
+__all__ = ["batch_axes_for", "make_local_mesh", "make_production_mesh"]

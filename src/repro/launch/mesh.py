@@ -1,0 +1,52 @@
+"""Production mesh definition (as a function — importing this module must not
+touch jax device state).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model").
+
+Axis semantics (DESIGN.md §3): ``model`` is the innermost/highest-locality axis
+(TP/EP/sequence), ``data`` is DP/FSDP, ``pod`` crosses the inter-pod DCN and
+carries either DP (default) or pipeline stages.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(shape: Tuple[int, ...] = None, axes: Tuple[str, ...] = None):
+    """Small mesh over whatever devices exist (tests: 8 host devices)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (1, n) if n > 1 else (1, 1)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes_for(mesh, global_batch: int, pp: int = 1,
+                   dp_over_model: bool = False) -> Tuple[str, ...]:
+    """Mesh axes to shard the batch over, largest-first, divisibility-checked.
+
+    long_500k has global_batch=1 — the batch stays replicated and parallelism
+    comes entirely from the model/sequence dimensions. With ``dp_over_model``
+    (mesh remap for small models) the model axis also carries batch.
+    """
+    axes = []
+    div = 1
+    wanted = ("pod", "data", "model") if dp_over_model else ("pod", "data")
+    candidates = [a for a in wanted if a in mesh.shape]
+    if pp > 1 and "pod" in candidates:
+        candidates.remove("pod")          # pod axis carries pipeline stages
+    for a in candidates:
+        if global_batch % (div * mesh.shape[a]) == 0:
+            axes.append(a)
+            div *= mesh.shape[a]
+    return tuple(axes)

@@ -1,0 +1,107 @@
+"""Build (step_fn, arg ShapeDtypeStructs, shardings) for any
+(arch × input-shape × mesh × plan) combination — the single entry point used by
+the dry-run, the trainer and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ModelConfig, ParallelPlan, SHAPES_BY_NAME, get_config, sharding
+from repro.core.config import InputShape
+from repro.configs import input_specs
+from repro.models import build_model
+from repro.train import Hyper, make_train_step, TrainState
+from repro.optim import adamw_init
+from .mesh import batch_axes_for
+
+
+def resolve_config(arch: str, shape_name: str, smoke: bool = False) -> ModelConfig:
+    from repro.core import get_smoke_config
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if shape_name == "long_500k" and cfg.arch_id == "gemma2-9b":
+        cfg = dataclasses.replace(cfg, long_context=True)   # sliding-window variant
+    return cfg
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: long_500k skipped per DESIGN.md §4"
+    return None
+
+
+def _ns(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh, plan: ParallelPlan,
+               smoke: bool = False):
+    """Returns (fn, args_sds tuple, in_shardings tuple, meta dict).
+
+    - train:   fn(state, batch) -> (state, metrics)
+    - prefill: fn(params, batch) -> logits
+    - decode:  fn(params, cache, tokens, pos) -> (logits, cache)
+    """
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = resolve_config(arch, shape_name, smoke)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(reason)
+
+    baxes = batch_axes_for(mesh, shape.global_batch, plan.pp,
+                           plan.dp_over_model)
+    model = build_model(cfg, plan, mesh, baxes)
+    rng = jax.random.PRNGKey(0)
+
+    params_sds = jax.eval_shape(model.init, rng)
+    pspecs = sharding.param_specs(params_sds, cfg, plan, mesh)
+    pshard = _ns(mesh, pspecs)
+    bspec = P(baxes if baxes else None)
+
+    meta = {"cfg": cfg, "shape": shape, "batch_axes": baxes, "model": model}
+
+    if shape.kind == "train":
+        hyper = Hyper()
+        step = make_train_step(model, plan, hyper)
+        state_sds = jax.eval_shape(
+            lambda r: TrainState(model.init(r), adamw_init(model.init(r))), rng)
+        ospecs = sharding.opt_state_specs(pspecs, params_sds, plan, mesh)
+        state_specs = TrainState(
+            params=pspecs,
+            opt=type(state_sds.opt)(step=P(), mu=ospecs, nu=ospecs))
+        state_shard = _ns(mesh, state_specs)
+        batch_sds = input_specs(cfg, shape)
+        batch_shard = {k: NamedSharding(mesh, P(baxes if baxes else None,
+                                                *([None] * (len(v.shape) - 1))))
+                       for k, v in batch_sds.items()}
+        return step, (state_sds, batch_sds), (state_shard, batch_shard), meta
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits
+        batch_sds = input_specs(cfg, shape)
+        batch_shard = {k: NamedSharding(mesh, P(baxes if baxes else None,
+                                                *([None] * (len(v.shape) - 1))))
+                       for k, v in batch_sds.items()}
+        return fn, (params_sds, batch_sds), (pshard, batch_shard), meta
+
+    # decode
+    specs = input_specs(cfg, shape, model)
+    cache_sds, tokens_sds, pos_sds = specs["cache"], specs["tokens"], specs["pos"]
+    cspecs = sharding.cache_specs(cache_sds, plan, mesh, baxes)
+    cshard = _ns(mesh, cspecs)
+
+    def fn(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    args = (params_sds, cache_sds, tokens_sds, pos_sds)
+    shardings = (pshard, cshard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, P()))
+    return fn, args, shardings, meta

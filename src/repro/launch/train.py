@@ -1,0 +1,101 @@
+"""End-to-end training driver.
+
+Runs real steps on the available devices (CPU in this container; the same code
+path drives a TPU slice — the mesh is the only difference):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \\
+        --steps 50 --batch 8 --seq 128
+
+Integrates the full substrate: synthetic data pipeline, sharded AdamW + ZeRO-1,
+remat, checkpointing with snapshot-stall persist, and anomaly monitoring with
+rollback recovery (survey §8).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ARCH_IDS, InputShape, ParallelPlan
+from repro.core.config import Family
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticDataset
+from repro.ft import Monitor, run_with_recovery
+from repro.launch.mesh import batch_axes_for, make_local_mesh
+from repro.launch.stepbuilder import resolve_config
+from repro.models import build_model
+from repro.train import Hyper, TrainState, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (full configs need a real pod)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="selective",
+                    choices=["none", "selective", "full"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = resolve_config(args.arch, "train_4k", smoke=args.smoke)
+    plan = ParallelPlan(remat=args.remat, microbatches=args.microbatches,
+                        compute_dtype="float32" if args.smoke else "bfloat16",
+                        ep=cfg.family == Family.MOE)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+
+    n_dev = len(jax.devices())
+    mesh = make_local_mesh() if n_dev > 1 else None
+    baxes = batch_axes_for(mesh, args.batch) if mesh else ()
+    model = build_model(cfg, plan, mesh, baxes)
+
+    hyper = Hyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                  total_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[train] arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"devices={n_dev} batch={args.batch} seq={args.seq}")
+
+    step_fn = jax.jit(make_train_step(model, plan, hyper), donate_argnums=(0,))
+    ds = SyntheticDataset(cfg, shape)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    monitor = Monitor()
+
+    t_start = time.time()
+    last = t_start
+
+    def get_batch(step: int):
+        return {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+
+    def logged_step(state, batch):
+        nonlocal last
+        state, metrics = step_fn(state, batch)
+        return state, metrics
+
+    state, report = run_with_recovery(
+        state, logged_step, get_batch, args.steps, ckpt, monitor,
+        ckpt_every=args.ckpt_every)
+
+    dt = time.time() - t_start
+    tokens = args.steps * args.batch * args.seq
+    print(f"[train] {args.steps} steps in {dt:.1f}s "
+          f"({tokens/dt:.0f} tok/s), loss {report.losses[0]:.4f} -> "
+          f"{report.losses[-1]:.4f}, anomalies={len(report.anomalies)}, "
+          f"restores={report.restores}")
+    print(f"[train] ckpt snapshot {ckpt.snapshot_seconds*1e3:.1f}ms "
+          f"persist {ckpt.persist_seconds*1e3:.1f}ms (async)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .families import Model, build_model
+from . import layers, moe, ssm, families
+
+__all__ = ["Model", "build_model", "layers", "moe", "ssm", "families"]

@@ -1,0 +1,241 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Naming convention matters: leaf names (``wq``, ``wo``, ``gate``, ``down``, ...)
+drive the sharding-rule engine in ``repro.core.sharding``.
+
+Attention comes in two exact implementations (survey §5.1.1):
+
+- :func:`attention_direct` — materializes the score matrix; fine for short seqs.
+- :func:`attention_blockwise` — Rabe–Staats / FlashAttention-style online-softmax
+  scan over KV blocks; O(S·B_k) live memory, used for 32k/500k sequences. This is
+  the pure-JAX oracle twin of ``repro.kernels.flash_attention``.
+
+Both support GQA (grouped queries, never materializing repeated KV), causal and
+sliding-window masks (gemma2 local/global alternation), attention-logit softcap,
+and a query position offset (for decode / chunked prefill).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+def dense_init(rng, shape, in_axis=-2):
+    fan_in = shape[in_axis]
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            / np.sqrt(fan_in))
+
+
+def split_tree(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def sinusoidal_pos_emb(positions, dim, max_timescale=10_000.0):
+    """(..., ) int positions -> (..., dim) sinusoidal embeddings (whisper-style)."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_timescale) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    args = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masking
+
+def attn_mask(q_pos, k_pos, *, causal: bool, window: int | jax.Array):
+    """Boolean mask (True = attend). q_pos: (S,), k_pos: (T,). ``window`` may be a
+    traced scalar (gemma2 alternation selects it per layer inside a scan)."""
+    i = q_pos[:, None]
+    j = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= j <= i
+    if isinstance(window, jax.Array) or window:
+        w = jnp.asarray(window)
+        m &= jnp.where(w > 0, (i - j) < w, True)
+    return m
+
+
+def _softcap(s, cap):
+    if isinstance(cap, (int, float)) and cap == 0.0:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+def _group_q(q, n_kv):
+    """(B, S, Hq, hd) -> (B, S, Hkv, G, hd)."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def attention_direct(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
+                     scale: Optional[float] = None):
+    """q: (B,S,Hq,hd), k/v: (B,T,Hkv,hd) -> (B,S,Hq,hd). Materializes scores."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    qg = _group_q(q, hkv)
+    # scores: (B, Hkv, G, S, T) in fp32
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    q_pos = q_offset + jnp.arange(s)
+    mask = attn_mask(q_pos, jnp.arange(t), causal=causal, window=window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, hd)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
+                        block_size=1024, scale: Optional[float] = None):
+    """Online-softmax scan over KV blocks; exact, O(S·block) live memory."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    assert t % block_size == 0, (t, block_size)
+    nb = t // block_size
+    scale = scale if scale is not None else hd ** -0.5
+    g = hq // hkv
+    qg = _group_q(q, hkv)
+    q_pos = q_offset + jnp.arange(s)
+
+    kb = k.reshape(b, nb, block_size, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block_size, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        m, l, o = carry
+        blk_idx, k_blk, v_blk = inputs
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        k_pos = blk_idx * block_size + jnp.arange(block_size)
+        mask = attn_mask(q_pos, k_pos, causal=causal, window=window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) * mask[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        o_new = o * corr[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    o0 = jnp.zeros((b, hkv, g, s, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                (jnp.arange(nb), kb, vb))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
+              block_size=1024, scale: Optional[float] = None):
+    """Dispatch: direct for short KV, blockwise otherwise."""
+    t = k.shape[1]
+    if t <= 2 * block_size or t % block_size:
+        return attention_direct(q, k, v, causal=causal, window=window,
+                                softcap=softcap, q_offset=q_offset, scale=scale)
+    return attention_blockwise(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               block_size=block_size, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + attention)
+
+def init_attn(rng, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    r = split_tree(rng, 4)
+    p = {
+        "wq": dense_init(r[0], (d, hq * hd)),
+        "wk": dense_init(r[1], (d, hkv * hd)),
+        "wv": dense_init(r[2], (d, hkv * hd)),
+        "wo": dense_init(r[3], (hq * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def qkv_proj(p, x, cfg, dtype):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return (q.reshape(b, s, hq, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+def attn_block(p, x, cfg, *, positions, window=0, causal=True, dtype=jnp.bfloat16,
+               use_rope=True):
+    """Full attention sub-block: qkv proj + rope + attention + output proj."""
+    q, k, v = qkv_proj(p, x, cfg, dtype)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    out = attention(q, k, v, causal=causal, window=window,
+                    softcap=cfg.attn_logit_softcap)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+
+def init_mlp(rng, d_model, d_ff):
+    r = split_tree(rng, 3)
+    return {
+        "gate": dense_init(r[0], (d_model, d_ff)),
+        "up": dense_init(r[1], (d_model, d_ff)),
+        "down": dense_init(r[2], (d_ff, d_model)),
+    }
+
+
+def mlp_block(p, x, dtype=jnp.bfloat16):
+    h = jax.nn.silu(x @ p["gate"].astype(dtype)) * (x @ p["up"].astype(dtype))
+    return h @ p["down"].astype(dtype)

@@ -1,0 +1,269 @@
+"""Mixture-of-Experts layer (survey §4.1.5).
+
+Two execution paths, selectable via :class:`ParallelPlan`:
+
+- **Dense dispatch** (baseline): GShard-style capacity-bounded one-hot
+  dispatch/combine einsums. Sharding is left to GSPMD propagation from the
+  expert-weight annotations (experts tensor-parallel inside each expert).
+- **Expert parallelism** (``plan.ep``): ``shard_map`` over ("data", "model") with
+  experts owned by ``model``-axis ranks and explicit ``all_to_all`` exchange —
+  the GShard/DeepSpeed-MoE execution model, with the MoE block's tokens
+  additionally sequence-sharded over ``model`` (DeepSpeed-TED-style hybrid) so
+  the all-to-all payload per device stays O(tokens/ (dp·tp)).
+
+Both paths share the router and the capacity/dropping policy, so they are
+numerically interchangeable (tested in tests/test_moe.py).
+
+DeepSeek-MoE fine-grained features: ``num_shared_experts`` always-on experts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import ModelConfig
+from .layers import dense_init, split_tree
+
+
+def init_moe(rng, cfg: ModelConfig):
+    e = cfg.moe
+    d, de = cfg.d_model, e.d_expert
+    r = split_tree(rng, 7)
+    p = {
+        "router": dense_init(r[0], (d, e.num_experts)),
+        "experts": {
+            "gate": dense_init(r[1], (e.num_experts, d, de), in_axis=-2),
+            "up": dense_init(r[2], (e.num_experts, d, de), in_axis=-2),
+            "down": dense_init(r[3], (e.num_experts, de, d), in_axis=-2),
+        },
+    }
+    if e.num_shared_experts:
+        ds = de * e.num_shared_experts
+        p["shared"] = {
+            "gate": dense_init(r[4], (d, ds)),
+            "up": dense_init(r[5], (d, ds)),
+            "down": dense_init(r[6], (ds, d)),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing
+
+def router_probs(p, x, cfg: ModelConfig, dtype):
+    """x: (N, d) -> (probs (N, E) fp32, aux_loss scalar)."""
+    e = cfg.moe
+    logits = (x @ p["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Switch-Transformer load-balancing auxiliary loss.
+    density = jnp.mean(probs, axis=0)                       # (E,)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e.num_experts)
+    density_proxy = jnp.mean(top1, axis=0)
+    aux = e.num_experts * jnp.sum(density * density_proxy) * e.aux_loss_coef
+    return probs, aux
+
+
+def topk_dispatch(probs, cfg: ModelConfig, capacity: int):
+    """Capacity-bounded top-k dispatch tensors.
+
+    Returns (dispatch (N, E, C) bool, combine (N, E, C) fp32).
+    Tokens overflowing an expert's capacity are dropped (GShard policy).
+    """
+    e = cfg.moe
+    n, E = probs.shape
+    top_p, top_idx = jax.lax.top_k(probs, e.top_k)          # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # position of each (token, slot) in its expert's queue
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)    # (N, k, E)
+    flat = onehot.reshape(n * e.top_k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(n, e.top_k, E)
+    pos = (pos_in_expert * onehot).sum(-1)                   # (N, k)
+    keep = pos < capacity
+
+    eo = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)       # (N, k, E)
+    co = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                        dtype=jnp.float32)                   # (N, k, C) (row of zeros if dropped)
+    dispatch = jnp.einsum("nke,nkc->nec", eo, co)            # (N, E, C)
+    combine = jnp.einsum("nke,nkc,nk->nec", eo, co, top_p)
+    return dispatch, combine
+
+
+def topk_scatter_dispatch(probs, cfg: ModelConfig, capacity: int):
+    """Index-based (MegaBlocks-inspired) dispatch: instead of (N, E, C) one-hot
+    dispatch/combine einsums, compute each (token, slot) -> capacity-buffer
+    index and move activations with gather/scatter. Identical routing semantics
+    to :func:`topk_dispatch` (same drops), ~E·C/k less dispatch-tensor traffic.
+
+    Returns (slot (N, k) int32 in [0, E*C] where E*C = dropped, weights (N, k)).
+    """
+    e = cfg.moe
+    n, E = probs.shape
+    top_p, top_idx = jax.lax.top_k(probs, e.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)
+    flat = onehot.reshape(n * e.top_k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(n, e.top_k, E)
+    pos = (pos_in_expert * onehot).sum(-1)
+    keep = pos < capacity
+    slot = jnp.where(keep, top_idx * capacity + pos, E * capacity)
+    return slot.astype(jnp.int32), top_p
+
+
+def _scatter_to_buffers(xf, slot, cfg: ModelConfig, capacity: int):
+    """(N, d) tokens -> (E, C, d) expert buffers via scatter (trash row E*C)."""
+    e = cfg.moe
+    n, d = xf.shape
+    buf = jnp.zeros((e.num_experts * capacity + 1, d), xf.dtype)
+    buf = buf.at[slot.reshape(-1)].set(
+        jnp.repeat(xf, e.top_k, axis=0).reshape(n * e.top_k, d))
+    return buf[:-1].reshape(e.num_experts, capacity, d)
+
+
+def _gather_from_buffers(h, slot, weights, dtype):
+    """(E, C, d) expert outputs -> (N, d) combined by routing weights."""
+    e_c, d = h.shape[0] * h.shape[1], h.shape[2]
+    flat = jnp.concatenate([h.reshape(e_c, d),
+                            jnp.zeros((1, d), h.dtype)], axis=0)
+    n, k = slot.shape
+    out = flat[slot.reshape(-1)].reshape(n, k, d)
+    return (out * weights[..., None].astype(dtype)).sum(axis=1)
+
+
+def _expert_ffn(w, h, dtype):
+    """h: (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", h, w["gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, w["up"].astype(dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w["down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# dense-dispatch path (baseline)
+
+def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum"):
+    """x: (B, S, d) -> (out, aux_loss). GSPMD-sharded local dispatch."""
+    e = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    n = b * s
+    capacity = max(int(n * e.top_k / e.num_experts * e.capacity_factor), 1)
+
+    probs, aux = router_probs(p, xf, cfg, dtype)
+    if dispatch_mode == "scatter":
+        slot, wts = topk_scatter_dispatch(probs, cfg, capacity)
+        h = _scatter_to_buffers(xf, slot, cfg, capacity)
+        h = _expert_ffn(p["experts"], h, dtype)
+        out = _gather_from_buffers(h, slot, wts, dtype)
+    else:
+        dispatch, combine = topk_dispatch(probs, cfg, capacity)
+        h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
+        h = _expert_ffn(p["experts"], h, dtype)
+        out = jnp.einsum("nec,ecd->nd", combine.astype(dtype), h)
+
+    if e.num_shared_experts:
+        sh = jax.nn.silu(xf @ p["shared"]["gate"].astype(dtype)) * (
+            xf @ p["shared"]["up"].astype(dtype))
+        out = out + sh @ p["shared"]["down"].astype(dtype)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel path (shard_map + all_to_all)
+
+def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
+           dispatch_mode: str = "einsum"):
+    """Expert-parallel MoE. x: (B, S, d) with B sharded over ``batch_axes``.
+
+    Inside the shard_map the MoE block's tokens are also sequence-sharded over
+    ``model``; experts live on ``model`` ranks; two all_to_alls move tokens to
+    expert owners and back.
+    """
+    e = cfg.moe
+    tp = mesh.shape["model"]
+    assert e.num_experts % tp == 0
+    e_local = e.num_experts // tp
+
+    baxes = batch_axes if batch_axes else None   # () -> replicated batch
+    pspec_x = P(baxes, "model", None)
+    pspec_params = {
+        "router": P(None, None),
+        "experts": {k: P("model", None, None) for k in ("gate", "up", "down")},
+    }
+    if e.num_shared_experts:
+        pspec_params["shared"] = {"gate": P(None, None), "up": P(None, None),
+                                  "down": P(None, None)}
+
+    def local_moe(pl, xl):
+        # xl: (B_loc, S/tp, d)
+        bl, sl, d = xl.shape
+        xf = xl.reshape(bl * sl, d)
+        n = bl * sl
+        capacity = max(int(n * e.top_k / e.num_experts * e.capacity_factor), 1)
+
+        probs, aux = router_probs(pl, xf, cfg, dtype)
+        if dispatch_mode == "scatter":
+            slot, wts = topk_scatter_dispatch(probs, cfg, capacity)
+            h = _scatter_to_buffers(xf, slot, cfg, capacity)
+        else:
+            dispatch, combine = topk_dispatch(probs, cfg, capacity)
+            # local buffers per (global) expert: (E, C, d)
+            h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
+        # ship expert rows to their owners: split E across model axis
+        h = h.reshape(tp, e_local, capacity, d)
+        h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
+        # h: (tp, e_local, C, d) — rows now from each peer, for MY experts
+        h = h.transpose(1, 0, 2, 3).reshape(e_local, tp * capacity, d)
+        h = _expert_ffn(pl["experts"], h, dtype)
+        # return trip
+        h = h.reshape(e_local, tp, capacity, d).transpose(1, 0, 2, 3)
+        h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
+        h = h.reshape(e.num_experts, capacity, d)
+        if dispatch_mode == "scatter":
+            out = _gather_from_buffers(h, slot, wts, dtype)
+        else:
+            out = jnp.einsum("nec,ecd->nd", combine.astype(dtype), h)
+
+        if e.num_shared_experts:
+            sh = jax.nn.silu(xf @ pl["shared"]["gate"].astype(dtype)) * (
+                xf @ pl["shared"]["up"].astype(dtype))
+            out = out + sh @ pl["shared"]["down"].astype(dtype)
+        # aux loss: average over all shards
+        aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out.reshape(bl, sl, d), aux
+
+    from jax import shard_map  # noqa: PLC0415
+
+    out, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(pspec_params, pspec_x),
+        out_specs=(pspec_x, P()),
+        check_vma=False,
+    )({k: p[k] for k in pspec_params}, x)
+    return out, aux
+
+
+def moe_block(p, x, cfg: ModelConfig, dtype, mesh=None, plan=None, batch_axes=("data",)):
+    """Dispatch between EP and dense paths.
+
+    The EP path sequence-shards the MoE block over ``model`` and therefore needs
+    seq % tp == 0; decode steps (S=1) and smoke configs fall back to dense.
+    """
+    mode = plan.moe_dispatch if plan is not None else "einsum"
+    if (plan is not None and plan.ep and mesh is not None
+            and x.shape[1] % mesh.shape["model"] == 0
+            and x.shape[0] % _axes_size(mesh, batch_axes) == 0):
+        return moe_ep(p, x, cfg, dtype, mesh, batch_axes, mode)
+    return moe_dense(p, x, cfg, dtype, mode)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n

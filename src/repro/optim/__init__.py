@@ -1,0 +1,8 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup
+from .clip import clip_by_global_norm
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "cosine_schedule", "linear_warmup", "clip_by_global_norm",
+]

@@ -1,0 +1,9 @@
+from .roofline import (
+    HBM_BW, LINK_BW, PEAK_FLOPS,
+    CollectiveStats, Roofline, model_flops_for, parse_collectives,
+)
+
+__all__ = [
+    "HBM_BW", "LINK_BW", "PEAK_FLOPS",
+    "CollectiveStats", "Roofline", "model_flops_for", "parse_collectives",
+]

@@ -1,0 +1,306 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — but this
+framework deliberately wraps layer stacks, KV-block streams and microbatches in
+``lax.scan`` (compile-time hygiene), so naive cost analysis undercounts FLOPs by
+~n_layers×. This walker parses the optimized HLO, multiplies per-computation
+costs by loop trip counts (``backend_config known_trip_count``, emitted by XLA:CPU and
+XLA:TPU for counted loops), and accumulates:
+
+- **flops**: 2 · result_elems · contracted_elems for every ``dot`` (matmuls are
+  ≥99% of LLM FLOPs; elementwise ops are ignored, consistent with how MFU is
+  conventionally counted);
+- **bytes**: Σ (operand bytes + result bytes) per instruction — an HBM-traffic
+  proxy assuming no fusion reuse *between* instructions (fusions are costed at
+  the fusion boundary, which is exactly the set of buffers that must
+  materialize);
+- **collectives**: per-kind link bytes with the ring model (see roofline.py).
+
+This is a text-level reimplementation of HloCostAnalysis with loop semantics —
+validated against analytic 6ND in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .roofline import _COLLECTIVE_KINDS, _DTYPE_BYTES, _group_size
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,]*\})?")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"(?:branch_computations|true_computation|"
+                        r"false_computation)=\{?%?([\w.\-,% ]+)\}?")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+}
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _shapes_bytes(s: str) -> int:
+    return sum(int(np.prod(sh)) * _DTYPE_BYTES[dt] if sh else _DTYPE_BYTES[dt]
+               for dt, sh in _parse_shapes(s))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str          # result shape string
+    op: str
+    rest: str            # everything after the open paren
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVE_KINDS})
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVE_KINDS})
+
+
+class HloModule:
+    def __init__(self, text: str, total_devices: int):
+        self.total_devices = total_devices
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            mh = _COMP_RE.match(line)
+            if mh and " = " not in line:
+                cur = mh.group(1)
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                self.comps[cur].append(
+                    Instr(mi.group(1), mi.group(2), mi.group(3), mi.group(4)))
+        # symbol table: instruction name -> result shape string (per computation)
+        self.symtab: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.result for i in instrs}
+            for c, instrs in self.comps.items()
+        }
+
+    # -- per-instruction costs ------------------------------------------------
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        res = _parse_shapes(ins.result)
+        if not res:
+            return 0.0
+        result_elems = int(np.prod(res[0][1])) if res[0][1] else 1
+        mc = _LHS_CONTRACT_RE.search(ins.rest)
+        operands = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+        contracted = 1
+        if mc and operands:
+            lhs_shape_str = self.symtab.get(comp, {}).get(operands[0], "")
+            lhs = _parse_shapes(lhs_shape_str)
+            if lhs and mc.group(1):
+                dims = [int(d) for d in mc.group(1).split(",")]
+                for d in dims:
+                    if d < len(lhs[0][1]):
+                        contracted *= lhs[0][1][d]
+        return 2.0 * result_elems * contracted
+
+    def _instr_bytes(self, comp: str, ins: Instr) -> int:
+        if ins.op in _SKIP_BYTES_OPS or ins.op == "fusion":
+            return 0
+        st = self.symtab.get(comp, {})
+        operands = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+        # Slice-like ops only touch the slice, not the whole operand; DUS/scatter
+        # are in-place after buffer assignment and touch ~2× the update region.
+        if ins.op in ("slice", "dynamic-slice", "gather", "reshape", "copy",
+                      "transpose", "broadcast"):
+            return 2 * _shapes_bytes(ins.result)
+        if ins.op == "dynamic-update-slice":
+            upd = operands[1] if len(operands) > 1 else None
+            if upd and upd in st:
+                return 2 * _shapes_bytes(st[upd])
+            return 2 * _shapes_bytes(ins.result)
+        if ins.op == "scatter":
+            upd = operands[2] if len(operands) > 2 else None
+            if upd and upd in st:
+                return 2 * _shapes_bytes(st[upd])
+            return 2 * _shapes_bytes(ins.result)
+        total = _shapes_bytes(ins.result)
+        for o in operands:
+            if o in st:
+                total += _shapes_bytes(st[o])
+        return total
+
+    _SLICE_LIKE = ("slice", "dynamic-slice", "gather")
+
+    def _fusion_bytes(self, comp: str, ins: Instr) -> int:
+        """Fusion boundary = materialized buffers (operands + result), except:
+
+        - a fused *parameter* whose every use is a slice-like op only reads the
+          slices (a scan body slicing its stacked xs must not be billed the
+          whole stack every iteration);
+        - a fused root that is a dynamic-update-slice writes only the update
+          region (XLA buffer assignment makes it in-place).
+        """
+        st = self.symtab.get(comp, {})
+        operands = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+        mcalls = _CALLS_RE.search(ins.rest)
+        fused = self.comps.get(mcalls.group(1), []) if mcalls else []
+        fsym = self.symtab.get(mcalls.group(1), {}) if mcalls else {}
+
+        # map parameter index -> parameter instr name in the fused computation
+        param_names: Dict[int, str] = {}
+        for fi in fused:
+            if fi.op == "parameter":
+                m = re.match(r"(\d+)", fi.rest)
+                if m:
+                    param_names[int(m.group(1))] = fi.name
+
+        # uses of each fused instruction name
+        uses: Dict[str, List[Instr]] = {}
+        for fi in fused:
+            for o in _OPERAND_RE.findall(fi.rest.split(")", 1)[0]):
+                uses.setdefault(o, []).append(fi)
+
+        total = 0
+        # result: if root is a DUS, bill 2× the update region instead
+        root = fused[-1] if fused else None
+        if root is not None and root.op == "dynamic-update-slice":
+            r_ops = _OPERAND_RE.findall(root.rest.split(")", 1)[0])
+            upd = r_ops[1] if len(r_ops) > 1 else None
+            total += 2 * _shapes_bytes(fsym.get(upd, "")) if upd in fsym \
+                else _shapes_bytes(ins.result)
+        else:
+            total += _shapes_bytes(ins.result)
+
+        for idx, o in enumerate(operands):
+            if o not in st:
+                continue
+            pname = param_names.get(idx)
+            puses = uses.get(pname, []) if pname else []
+            if puses and all(u.op in self._SLICE_LIKE for u in puses):
+                total += sum(_shapes_bytes(u.result) for u in puses)
+            else:
+                total += _shapes_bytes(st[o])
+        return total
+
+    # -- recursive walk -------------------------------------------------------
+
+    def cost(self) -> HloCost:
+        out = HloCost()
+        if self.entry:
+            self._walk(self.entry, 1.0, out, set())
+        return out
+
+    def _walk(self, comp: str, mult: float, out: HloCost, stack: frozenset):
+        if comp not in self.comps or comp in stack:
+            return
+        stack = stack | {comp}
+        for ins in self.comps[comp]:
+            op = ins.op
+            if op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = _BODY_RE.search(ins.rest)
+                if mb:
+                    self._walk(mb.group(1), mult * trip, out, stack)
+                mcnd = _COND_RE.search(ins.rest)
+                if mcnd:
+                    self._walk(mcnd.group(1), mult * (trip + 1), out, stack)
+                continue
+            if op == "fusion":
+                mcalls = _CALLS_RE.search(ins.rest)
+                if mcalls:
+                    self._walk_fusion_flops(mcalls.group(1), mult, out, stack)
+                out.bytes += mult * self._fusion_bytes(comp, ins)
+                continue
+            if op in ("call", "custom-call", "async-start"):
+                mto = _TOAPPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+                if mto:
+                    self._walk(mto.group(1), mult, out, stack)
+                if op != "call":
+                    out.bytes += mult * self._instr_bytes(comp, ins)
+                continue
+            if op == "conditional":
+                mbr = _BRANCH_RE.search(ins.rest)
+                if mbr:
+                    for b in re.findall(r"[\w.\-]+", mbr.group(1)):
+                        self._walk(b, mult, out, stack)
+                continue
+
+            kind = next((k for k in _COLLECTIVE_KINDS
+                         if op == k or op.startswith(k + "-")), None)
+            if kind is not None and not op.endswith("-done"):
+                size = _shapes_bytes(ins.result)
+                if op.endswith("-start"):
+                    size //= 2
+                n = _group_size(ins.rest, self.total_devices)
+                out.collective_counts[kind] += mult
+                frac = (n - 1) / n if n > 1 else 0.0
+                if kind == "all-reduce":
+                    link = 2.0 * frac * size
+                elif kind == "all-gather":
+                    link = frac * size
+                elif kind == "reduce-scatter":
+                    link = frac * size * n
+                elif kind == "all-to-all":
+                    link = frac * size
+                else:
+                    link = float(size) if n > 1 else 0.0
+                out.collective_bytes_by_kind[kind] += mult * link
+                out.collective_link_bytes += mult * link
+                out.bytes += mult * self._instr_bytes(comp, ins)
+                continue
+
+            if op == "dot" or op == "convolution":
+                out.flops += mult * self._dot_flops(comp, ins)
+            out.bytes += mult * self._instr_bytes(comp, ins)
+
+    def _walk_fusion_flops(self, comp: str, mult: float, out: HloCost,
+                           stack: frozenset):
+        """Inside fusions only dots contribute flops; bytes counted at boundary."""
+        if comp not in self.comps or comp in stack:
+            return
+        stack = stack | {comp}
+        for ins in self.comps[comp]:
+            if ins.op in ("dot", "convolution"):
+                out.flops += mult * self._dot_flops(comp, ins)
+            elif ins.op == "fusion":
+                mcalls = _CALLS_RE.search(ins.rest)
+                if mcalls:
+                    self._walk_fusion_flops(mcalls.group(1), mult, out, stack)
+
+
+def analyze_hlo(text: str, total_devices: int) -> HloCost:
+    return HloModule(text, total_devices).cost()

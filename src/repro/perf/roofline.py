@@ -1,0 +1,183 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), per the assignment:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis — we parse the optimized HLO text and cost each
+collective with the standard ring model on its parsed replica-group size N:
+
+    all-reduce      2·(N-1)/N · size     (reduce-scatter + all-gather phases)
+    all-gather      (N-1)/N · result_size
+    reduce-scatter  (N-1)/N · operand_size ≈ (N-1) · result_size
+    all-to-all      (N-1)/N · size
+    collective-permute  size
+
+giving *per-device bytes crossing links*, which is what the link-bandwidth
+denominator wants. Hardware constants: TPU v5e-class chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                     "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[2048,1024]' -> bytes. Tuples: sum parts."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    """Parse replica_groups; returns participants per group."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)      # iota v2
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{(.*?)\}\}", line)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        return max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]       # raw result sizes per kind
+    link_bytes: Dict[str, float]       # ring-model per-device bytes per kind
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVE_KINDS}
+    rbytes = {k: 0 for k in _COLLECTIVE_KINDS}
+    lbytes = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*?) ([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((k for k in _COLLECTIVE_KINDS
+                     if op == k or op.startswith(k + "-")), None)
+        if kind is None or op.endswith("-done"):
+            continue
+        size = _shape_bytes(m.group(1))
+        if op.endswith("-start"):
+            size //= 2            # async start: result tuple carries operand+result
+        n = _group_size(ls, total_devices)
+        counts[kind] += 1
+        rbytes[kind] += size
+        if n <= 1:
+            continue
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            lbytes[kind] += 2.0 * frac * size
+        elif kind == "all-gather":
+            lbytes[kind] += frac * size
+        elif kind == "reduce-scatter":
+            lbytes[kind] += frac * size * n       # operand = result × N
+        elif kind == "all-to-all":
+            lbytes[kind] += frac * size
+        else:  # collective-permute
+            lbytes[kind] += float(size)
+    return CollectiveStats(counts, rbytes, lbytes)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float                  # 6·N(active)·D analytic
+    collectives: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        # cost_analysis flops are whole-program (all devices for SPMD on the
+        # host platform count once) — they are per-program; divide by chips.
+        return self.hlo_flops / (PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return float("nan")
+        return self.model_flops / (self.hlo_flops * self.chips)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_device": self.hlo_flops,
+            "hlo_bytes_per_device": self.hlo_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D per the assignment (D = tokens processed per step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,32 @@
+"""Cross-entropy over (possibly vocab-sharded) logits.
+
+Logits arrive fp32 (models upcast at the head). The log-softmax reduction over a
+``model``-sharded vocab dim lowers to a reduce + all-reduce pair under GSPMD —
+the vocab-parallel pattern from Megatron-LM (survey §4.1.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
+    """logits: (..., V) fp32; labels: (...) int32. Mean over all positions.
+
+    ``z_loss`` (PaLM-style) regularizes the partition function — also keeps the
+    softmax numerics healthy in long bf16 runs.
+    """
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - label_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return nll.mean()
+
+
+def top1_accuracy(logits: jax.Array, labels: jax.Array):
+    return (logits.argmax(-1) == labels).mean()

@@ -1,0 +1,142 @@
+"""Pipeline parallelism over the ``pod`` axis (survey §4.1.3).
+
+SPMD formulation (the JAX-native equivalent of MPMD GPipe — DESIGN.md §2):
+inside a ``shard_map`` over ``pod``, every pod executes the same program; pod
+``i`` holds layers [i·L/P, (i+1)·L/P) (the layer-stacked params are sharded on
+their leading dim), and activations rotate stage-to-stage with
+``ppermute``. The schedule is GPipe fill-drain: with M microbatches and P
+stages the loop runs M+P-1 ticks, bubble fraction (P-1)/(M+P-1). Reverse-mode
+AD differentiates straight through the ``ppermute``s, generating the mirrored
+backward pipeline automatically.
+
+Embedding runs on every pod (cheap, replicated weights) but only stage 0's
+output enters the pipeline; the LM head + loss run on the last stage and the
+scalar loss is broadcast back with a ``psum`` mask — standard SPMD-pipeline
+bookkeeping.
+
+Supported for decoder-only families (dense / vlm backbones); the hybrid/
+enc-dec/MoE archs pipeline equally in principle but are out of scope for this
+feature (EXPERIMENTS.md notes which configs exercise it).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import ModelConfig, ParallelPlan
+from repro.models.families import _decoder_layer_fwd, _embed, _layer_windows, _logits
+from repro.models.layers import rms_norm
+from repro.train.loss import cross_entropy
+
+
+def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
+                      batch_axes: Tuple[str, ...] = ("data",)):
+    """Returns loss_fn(params, batch) with layers pipelined over ``pod``.
+
+    Requires: mesh has a ``pod`` axis, plan.pp == mesh.shape["pod"],
+    plan.microbatches >= plan.pp, cfg.n_layers % pp == 0.
+    """
+    pp = mesh.shape["pod"]
+    assert plan.pp == pp and cfg.n_layers % pp == 0
+    n_micro = plan.microbatches
+    assert n_micro >= pp, "need microbatches >= stages for pipelining"
+    layers_per_stage = cfg.n_layers // pp
+    dtype = jnp.dtype(plan.compute_dtype)
+    windows_all = jnp.asarray(_layer_windows(cfg))
+    layer_fwd = _decoder_layer_fwd(cfg, dtype, None, plan, batch_axes)
+    baxes = batch_axes if batch_axes else None
+
+    # param specs: layer stack sharded over pod on dim 0; the rest replicated
+    # over pod (embed/lm_head/final_norm are small relative to the stack).
+    def param_specs(params):
+        def one(path, leaf):
+            names = [str(getattr(p, "key", getattr(p, "name", p)))
+                     for p in path]
+            if "layers" in names:
+                return P("pod")
+            return P()
+        return jax.tree_util.tree_map_with_path(one, params)
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+
+        pspecs = param_specs(params)
+        windows = windows_all.reshape(pp, layers_per_stage)
+
+        def staged(params_local, tokens_l, labels_l, windows_l):
+            stage = jax.lax.axis_index("pod")
+            positions = jnp.arange(s)
+
+            # microbatch queue over the LOCAL (data-sharded) batch;
+            # stage 0 feeds the pipe
+            bl = tokens_l.shape[0]
+            assert bl % n_micro == 0, (bl, n_micro)
+            mb = bl // n_micro
+            toks_mb = tokens_l.reshape(n_micro, mb, s)
+            labs_mb = labels_l.reshape(n_micro, mb, s)
+
+            def stage_fn(x):
+                def body(carry, xs):
+                    xc, aux = carry
+                    lp, w = xs
+                    xn, a = layer_fwd(xc, lp, w, positions)
+                    return (xn, aux + a), None
+                (x, aux), _ = jax.lax.scan(
+                    body, (x, jnp.float32(0.0)),
+                    (params_local["layers"], windows_l[0]))
+                return x, aux
+
+            def tick(carry, t):
+                buf, loss_sum, aux_sum, tok_count = carry
+                # stage 0 ingests microbatch t (if still filling)
+                mb_idx = jnp.clip(t, 0, n_micro - 1)
+                fresh = _embed(params_local, toks_mb[mb_idx], cfg, dtype)
+                x = jnp.where((stage == 0) & (t < n_micro), fresh, buf)
+                x, aux = stage_fn(x)
+                # last stage computes loss for the microbatch that entered at
+                # t - (pp - 1)
+                out_idx = jnp.clip(t - (pp - 1), 0, n_micro - 1)
+                h = rms_norm(x, params_local["final_norm"]["scale"], cfg.rms_eps)
+                logits = _logits(params_local, h, cfg, dtype)
+                mb_loss = cross_entropy(logits, labs_mb[out_idx])
+                take = (stage == pp - 1) & (t >= pp - 1)
+                loss_sum = loss_sum + jnp.where(take, mb_loss, 0.0)
+                aux_sum = aux_sum + jnp.where(take, aux, 0.0)
+                tok_count = tok_count + jnp.where(take, 1.0, 0.0)
+                # rotate activations forward one stage
+                perm = [(i, (i + 1) % pp) for i in range(pp)]
+                buf = jax.lax.ppermute(x, "pod", perm)
+                return (buf, loss_sum, aux_sum, tok_count), None
+
+            buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
+            init = (buf0, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+            (buf, loss_sum, aux_sum, cnt), _ = jax.lax.scan(
+                tick, init, jnp.arange(n_micro + pp - 1))
+            # broadcast the last stage's mean loss to all pods, then average
+            # over the data-parallel shards
+            loss = jax.lax.psum(loss_sum, "pod") / n_micro
+            aux = jax.lax.psum(aux_sum, "pod") / n_micro
+            if batch_axes:
+                loss = jax.lax.pmean(loss, batch_axes)
+                aux = jax.lax.pmean(aux, batch_axes)
+            return loss, aux
+
+        in_specs = (pspecs,
+                    P(baxes, None), P(baxes, None),
+                    P("pod", None))
+        loss, aux = shard_map(
+            staged, mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(P(), P()),
+            check_vma=False,
+        )(params, tokens, labels, windows)
+        return loss + aux, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn

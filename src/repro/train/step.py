@@ -1,0 +1,101 @@
+"""Train-step factory: loss + grad + clip + AdamW, with microbatch accumulation.
+
+The returned function is pure and jit/pjit-friendly:
+
+    state = TrainState(params, opt)
+    state, metrics = train_step(state, batch)
+
+Gradient accumulation (``plan.microbatches``) runs as a ``lax.scan`` over
+microbatch slices — constant HLO size, and under pipeline parallelism the same
+slicing provides the pipeline's microbatches.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ParallelPlan
+from repro.models.families import Model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+from .loss import cross_entropy
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any          # AdamWState
+
+
+class Hyper(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    z_loss: float = 1e-4
+
+
+def init_train_state(model: Model, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params, adamw_init(params))
+
+
+def make_loss_fn(model: Model, hyper: Hyper) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        loss = cross_entropy(logits, batch["labels"], z_loss=hyper.z_loss)
+        return loss + aux, {"xent": loss, "moe_aux": aux}
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, plan: ParallelPlan,
+                    hyper: Hyper = Hyper()) -> Callable:
+    loss_fn = make_loss_fn(model, hyper)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        params, opt = state
+
+        if plan.microbatches > 1:
+            mb = _split_microbatches(batch, plan.microbatches)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                (loss, aux), grads = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss, a_acc + aux["moe_aux"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / plan.microbatches, grads)
+            loss = loss / plan.microbatches
+            aux = {"moe_aux": aux_sum / plan.microbatches}
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
+        lr = cosine_schedule(opt.step, hyper.peak_lr, hyper.warmup_steps,
+                             hyper.total_steps)
+        new_params, new_opt = adamw_update(
+            grads, opt, params, lr, weight_decay=hyper.weight_decay)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            "moe_aux": aux["moe_aux"],
+        }
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

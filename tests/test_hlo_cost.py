@@ -1,0 +1,94 @@
+"""Trip-count-aware HLO cost walker: validated against analytic FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perf.hlo_cost import analyze_hlo
+from repro.perf.roofline import model_flops_for
+from repro.core import ModelConfig, ParallelPlan, Family, InputShape
+from repro.models import build_model
+from repro.train import TrainState, make_train_step
+from repro.optim import adamw_init
+
+
+def test_scan_trip_count_multiplied():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((256,), jnp.float32)
+
+    def single(w, x):
+        return w @ x
+
+    def scanned(w, x):
+        def body(c, _):
+            return w @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=12)
+        return out
+
+    f1 = analyze_hlo(jax.jit(single).lower(w, x).compile().as_text(), 1).flops
+    f12 = analyze_hlo(jax.jit(scanned).lower(w, x).compile().as_text(), 1).flops
+    assert f1 == 2 * 256 * 256
+    assert f12 == 12 * f1
+
+
+def test_dot_flops_with_batch_dims():
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    comp = jax.jit(lambda a, b: jnp.einsum("bij,bjk->bik", a, b)).lower(a, b).compile()
+    flops = analyze_hlo(comp.as_text(), 1).flops
+    assert flops == 2 * 4 * 64 * 16 * 32
+
+
+def test_train_step_flops_near_6nd():
+    """hlo_flops must land between 6ND (no remat would be ~6ND + attn/head
+    overhead) and ~10ND (full remat re-runs the forward)."""
+    cfg = ModelConfig("t", Family.DENSE, n_layers=4, d_model=256, n_heads=4,
+                      n_kv_heads=4, d_ff=1024, vocab=1024)
+    plan = ParallelPlan(remat="full", compute_dtype="float32")
+    model = build_model(cfg, plan)
+    step = make_train_step(model, plan)
+    b, s = 4, 128
+    state = jax.eval_shape(
+        lambda r: TrainState(model.init(r), adamw_init(model.init(r))),
+        jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    comp = jax.jit(step).lower(state, batch).compile()
+    flops = analyze_hlo(comp.as_text(), 1).flops
+    nd6 = 6 * cfg.param_count() * b * s
+    assert 0.9 * nd6 < flops < 1.8 * nd6, flops / nd6
+
+
+def test_collectives_parsed_with_group_size(multidevice):
+    multidevice("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.perf.hlo_cost import analyze_hlo
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+def f(w, x):
+    return (x @ w).sum()
+
+comp = jax.jit(jax.grad(f), in_shardings=(
+    NamedSharding(mesh, P(None, "model")),
+    NamedSharding(mesh, P("data", None)))).lower(
+    jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    jax.ShapeDtypeStruct((32, 64), jnp.float32)).compile()
+a = analyze_hlo(comp.as_text(), 8)
+assert a.collective_counts["all-reduce"] >= 1, a.collective_counts
+assert a.collective_link_bytes > 0
+print("collectives:", {k: v for k, v in a.collective_counts.items() if v})
+""")
+
+
+def test_model_flops_for_shapes():
+    cfg = ModelConfig("t", Family.DENSE, n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab=256)
+    n = cfg.param_count()
+    train = model_flops_for(cfg, InputShape("t", 128, 4, "train"))
+    prefill = model_flops_for(cfg, InputShape("p", 128, 4, "prefill"))
+    decode = model_flops_for(cfg, InputShape("d", 128, 4, "decode"))
+    assert train == 6 * n * 512
+    assert prefill == 2 * n * 512
+    assert decode == 2 * n * 4

@@ -1,0 +1,62 @@
+"""Optimizer / schedule / clipping unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adamw_init, adamw_update, clip_by_global_norm, cosine_schedule,
+)
+
+
+def test_adamw_matches_reference_math():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((3,)), jnp.float32)}
+    g = jax.tree.map(lambda x: jnp.ones_like(x) * 0.5, p)
+    st_ = adamw_init(p)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+    new_p, new_st = adamw_update(g, st_, p, lr, b1=b1, b2=b2, eps=eps,
+                                 weight_decay=wd)
+
+    # reference (step 1): mhat = g, vhat = g², delta = g/|g|
+    for k, nd in [("w", 2), ("b", 1)]:
+        gk = np.asarray(g[k], np.float64)
+        pk = np.asarray(p[k], np.float64)
+        delta = gk / (np.abs(gk) + eps)
+        wd_k = wd if nd > 1 else 0.0             # no decay on 1-D params
+        expect = pk - lr * (delta + wd_k * pk)
+        np.testing.assert_allclose(np.asarray(new_p[k]), expect, rtol=1e-5)
+    assert int(new_st.step) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), max_norm=st.floats(0.1, 10.0))
+def test_clip_by_global_norm_property(seed, max_norm):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((5,)), jnp.float32)}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    out_norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                  for x in jax.tree.leaves(clipped))))
+    assert out_norm <= max_norm * (1 + 1e-5)
+    if float(norm) <= max_norm:   # no-op when under the bound
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(step=st.integers(0, 10_000))
+def test_cosine_schedule_bounds(step):
+    peak, warm, total = 3e-4, 100, 10_000
+    lr = float(cosine_schedule(jnp.int32(step), peak, warm, total))
+    assert 0.0 < lr <= peak * (1 + 1e-6)
+    if step >= total:
+        assert abs(lr - 0.1 * peak) < 1e-9      # floor at min_ratio
+
+
+def test_schedule_monotone_warmup():
+    lrs = [float(cosine_schedule(jnp.int32(s), 1e-3, 50, 1000))
+           for s in range(0, 50, 5)]
+    assert all(b >= a for a, b in zip(lrs, lrs[1:]))
