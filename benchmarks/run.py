@@ -83,6 +83,36 @@ def bench_attention():
     emit("attention.pallas_interpret.s256", us_f,
          "note=python-interpreted;validates-correctness-not-speed")
 
+    # fwd+bwd through each implementation (survey §5.1.1: FlashAttention-2's
+    # one-write/two-reads backward is what makes the fused kernel pay off in
+    # training, not just prefill)
+    from repro.models.layers import attention
+    s = 256
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k, v = q, q
+
+    def fwdbwd(impl, block_size):
+        def loss(q, k, v):
+            return jnp.sum(attention(q, k, v, causal=True, impl=impl,
+                                     block_size=block_size))
+        return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+    # bytes the autodiff backward re-materializes (scores + probs, fp32) vs
+    # the fused backward's extra residual (one lse row per query)
+    rematerialized = 2 * b * h * s * s * 4
+    lse_bytes = b * h * s * 4
+    for name, impl, block_size, iters in [
+        ("xla_direct", "xla", 1024, 3),       # t <= 2*block -> direct
+        ("xla_blockwise", "xla", 64, 3),
+        ("pallas", "pallas", 1024, 1),        # interpret mode off-TPU
+    ]:
+        fn = fwdbwd(impl, block_size)
+        us = timeit(lambda: fn(q, k, v), iters=iters)
+        extra = {"xla_direct": f";bwd_score_bytes={rematerialized}",
+                 "pallas": f";lse_bytes={lse_bytes}"}.get(name, "")
+        emit(f"attention.fwdbwd.{name}.s{s}", us,
+             f"phase=fwd+bwd;impl={impl}{extra}")
+
 
 # ---------------------------------------------------------------------------
 # survey §4.1.1/§6.2 (ZeRO/FSDP memory-vs-communication table)
@@ -314,12 +344,25 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows to PATH as JSON "
+                         "(machine-readable perf trajectory)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and not name.startswith(args.only):
             continue
         fn()
+    if args.json:
+        import json
+        recs = []
+        for row in ROWS:
+            name, us, derived = row.split(",", 2)
+            recs.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=1)
+        print(f"wrote {len(recs)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the one entry point for CI and fresh clones.
+# Mirrors ROADMAP.md: PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -201,10 +201,19 @@ class ParallelPlan:
                                    # (paper-faithful). "scatter": MegaBlocks-
                                    # inspired index gather/scatter — same
                                    # routing, ~E·C/k less dispatch traffic.
+    attn_impl: str = "auto"        # "auto" | "xla" | "pallas": which attention
+                                   # implementation train/prefill use (survey
+                                   # §5.1.1). Resolved per call site by
+                                   # repro.kernels.dispatch — "auto" picks the
+                                   # fused Pallas flash kernel on TPU backends
+                                   # and the XLA twins elsewhere.
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
 
     def validate(self, cfg: ModelConfig) -> None:
+        if self.attn_impl not in ("auto", "xla", "pallas"):
+            raise ValueError(
+                f"attn_impl must be auto|xla|pallas, got {self.attn_impl!r}")
         if self.ep and cfg.family != Family.MOE:
             raise ValueError(f"expert parallelism requires a MoE arch, got {cfg.family}")
         if self.ep and self.dp_over_model:

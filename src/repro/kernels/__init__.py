@@ -1,14 +1,31 @@
 """Pallas TPU kernels for the compute hot spots the survey optimizes:
 
-- flash_attention (survey §5.1.1) — online-softmax tiled attention
+- flash_attention (survey §5.1.1) — online-softmax tiled attention, now fully
+  differentiable: the forward emits per-row logsumexp and ``jax.custom_vjp``
+  ties it to FlashAttention-2-style dq / dkv recompute kernels, so the train
+  step backprops through the fused kernel without materializing O(S·T) scores.
 - grouped_gemm / expert_gemm (survey §4.1.5) — MoE per-expert GEMM
-- ssd_chunk_scan (Mamba2 SSD) — fused chunked state-space scan (§Perf pair B)
+  (forward-only; porting onto the custom-VJP pattern is a ROADMAP open item)
+- ssd_chunk_scan (Mamba2 SSD) — fused chunked state-space scan (§Perf pair B;
+  forward-only, same open item)
+
+Dispatch (``dispatch.py``): model layers call attention through
+``dispatch_attention`` with ``impl = ParallelPlan.attn_impl``:
+
+- ``"xla"``    — the pure-jnp twins in models/layers.py (direct for short KV,
+  blockwise with boundary padding otherwise); kept as the gradient oracle.
+- ``"pallas"`` — the fused kernel (interpret mode off-TPU); falls back to XLA
+  when mask params are traced (gemma2 local/global alternation).
+- ``"auto"``   — pallas only on TPU backends with static masks and
+  lane-friendly head_dim; XLA everywhere else.
 
 Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
-tests sweep shapes/dtypes and assert allclose in interpret mode.
+tests sweep shapes/dtypes/grads and assert allclose in interpret mode.
 """
 
+from .dispatch import dispatch_attention, select_impl
 from .ops import expert_gemm, flash_attention, ssd_chunk_scan
 from . import ref
 
-__all__ = ["expert_gemm", "flash_attention", "ssd_chunk_scan", "ref"]
+__all__ = ["dispatch_attention", "expert_gemm", "flash_attention",
+           "select_impl", "ssd_chunk_scan", "ref"]

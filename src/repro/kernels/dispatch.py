@@ -1,0 +1,89 @@
+"""Kernel dispatch — pick an attention implementation per call site.
+
+This is the architecture hook for every fused kernel: model code calls
+:func:`dispatch_attention` (via ``repro.models.layers.attention``) with
+``impl = plan.attn_impl`` and the dispatcher decides, per call site, whether
+the fused Pallas kernel or the XLA twins run. Rules:
+
+- ``impl="xla"``    — always the pure-XLA twins: ``attention_direct`` for
+  short KV, ``attention_blockwise`` otherwise (KV padded to the block
+  boundary when the length doesn't divide, so long unaligned contexts never
+  fall back to the quadratic path).
+- ``impl="pallas"`` — the fused flash kernel whenever the mask parameters are
+  static; traced masks (gemma2 local/global alternation scans the window as
+  layer metadata) fall back to XLA since Pallas masks are compile-time.
+- ``impl="auto"``   — Pallas iff running on a TPU backend with static mask
+  parameters and a lane-friendly head_dim; XLA otherwise. Off-TPU the Pallas
+  interpreter validates correctness but is orders of magnitude slower, so
+  auto never selects it — tests and benchmarks opt in with ``impl="pallas"``.
+
+Layouts: model code uses (B, S, H, hd); the kernel uses head-major
+(B, H, S, hd). The dispatcher owns the transposes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.models import layers as _layers
+from .flash_attention import _pad_seq, flash_attention, resolve_interpret
+
+IMPLS = ("auto", "xla", "pallas")
+
+
+def _is_static(x) -> bool:
+    return isinstance(x, (int, np.integer))
+
+
+def select_impl(impl: str, *, head_dim: int, window, q_offset) -> str:
+    """Resolve "auto"/"pallas"/"xla" to the implementation that will run."""
+    if impl not in IMPLS:
+        raise ValueError(f"attn_impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "xla":
+        return "xla"
+    static = _is_static(window) and _is_static(q_offset)
+    if impl == "pallas":
+        return "pallas" if static else "xla"
+    if (static and jax.default_backend() == "tpu"
+            and head_dim % 8 == 0 and head_dim <= 256):
+        return "pallas"
+    return "xla"
+
+
+def dispatch_attention(q, k, v, *, impl: str = "auto", causal: bool = True,
+                       window=0, softcap: float = 0.0, q_offset=0,
+                       block_size: int = 1024,
+                       scale: Optional[float] = None,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: Optional[bool] = None):
+    """q: (B, S, Hq, hd), k/v: (B, T, Hkv, hd) -> (B, S, Hq, hd)."""
+    choice = select_impl(impl, head_dim=q.shape[-1], window=window,
+                         q_offset=q_offset)
+    if choice == "pallas":
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=int(window),
+            softcap=softcap, scale=scale, q_offset=int(q_offset),
+            block_q=block_q, block_k=block_k,
+            interpret=resolve_interpret(interpret))
+        return out.transpose(0, 2, 1, 3)
+
+    t = k.shape[1]
+    if t <= 2 * block_size:
+        return _layers.attention_direct(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale)
+    if t % block_size:
+        # pad KV to the block boundary and mask the tail — never drop to the
+        # O(S·T) direct path just because the context length is unaligned
+        t_pad = -(-t // block_size) * block_size
+        return _layers.attention_blockwise(
+            q, _pad_seq(k, 1, t_pad), _pad_seq(v, 1, t_pad), causal=causal,
+            window=window, softcap=softcap, q_offset=q_offset,
+            block_size=block_size, scale=scale, kv_len=t)
+    return _layers.attention_blockwise(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_size=block_size, scale=scale)

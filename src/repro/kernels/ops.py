@@ -1,8 +1,9 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-These are the entry points the model layers use when ``plan.use_pallas`` style
-flags are enabled (on real TPU hardware; the CPU container exercises them in
-interpret mode through the tests and benchmarks).
+These are the entry points model layers reach through the dispatch layer
+(``repro.kernels.dispatch``, driven by ``ParallelPlan.attn_impl``). On real
+TPU hardware they compile; the CPU container exercises them in interpret mode
+(``interpret=None`` auto-detects the backend).
 """
 
 from __future__ import annotations
@@ -17,13 +18,18 @@ from .ssd_scan import ssd_chunk_scan as _ssd
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+    "causal", "window", "softcap", "scale", "q_offset", "block_q", "block_k",
+    "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
-                    block_q=128, block_k=128, interpret=True):
-    """(B, Hq, S, hd) attention; GQA via kv-head broadcast in the index map."""
+                    q_offset=0, block_q=128, block_k=128, interpret=None):
+    """(B, Hq, S, hd) attention; GQA via kv-head broadcast in the index map.
+
+    Differentiable: ``jax.grad`` through this runs the FlashAttention-2-style
+    dq / dkv Pallas kernels (see flash_attention.py).
+    """
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  scale=scale, block_q=block_q, block_k=block_k,
-                  interpret=interpret)
+                  scale=scale, q_offset=q_offset, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -184,6 +184,11 @@ def _decoder_layer_fwd(cfg: ModelConfig, dtype, mesh, plan, batch_axes,
     use_rope = cfg.pos_emb == "rope"
     cq, ckv = _seq_constrainers(plan, mesh, batch_axes)
     cx = _residual_constrainer(mesh, batch_axes)
+    impl = plan.attn_impl if plan is not None else "auto"
+    # unless layers alternate local/global, every layer shares one static
+    # window — use it instead of the scanned (traced) metadata so the Pallas
+    # kernel (compile-time masks) stays eligible
+    alternating = bool(cfg.local_global_alternating and cfg.sliding_window)
 
     def layer(x, lp, window, positions):
         x = cx(x)
@@ -193,8 +198,9 @@ def _decoder_layer_fwd(cfg: ModelConfig, dtype, mesh, plan, batch_axes,
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
         q, k, v = cq(q), ckv(k), ckv(v)
-        a = attention(q, k, v, causal=True, window=window,
-                      softcap=cfg.attn_logit_softcap)
+        a = attention(q, k, v, causal=True,
+                      window=window if alternating else cfg.sliding_window,
+                      softcap=cfg.attn_logit_softcap, impl=impl)
         a = cq(a)
         a = a.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"].astype(dtype)
         a = checkpoint_name(a, "attn_out")
@@ -469,7 +475,8 @@ def build_hybrid(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
         q, k, v = cq(q), ckv(k), ckv(v)
-        a = cq(attention(q, k, v, causal=True, window=cfg.sliding_window))
+        a = cq(attention(q, k, v, causal=True, window=cfg.sliding_window,
+                         impl=plan.attn_impl))
         x = x + a.reshape(x.shape[0], x.shape[1], -1) @ sp["attn"]["wo"].astype(dtype)
         h = rms_norm(x, sp["norm2"]["scale"], cfg.rms_eps)
         return x + mlp_block(sp["mlp"], h, dtype)
@@ -561,6 +568,7 @@ def build_enc_dec(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
                   mesh=None, batch_axes=("data",)) -> Model:
     plan = plan or ParallelPlan()
     dtype = jnp.dtype(plan.compute_dtype)
+    impl = plan.attn_impl
 
     def init_enc_layer(rng):
         r = split_tree(rng, 2)
@@ -606,7 +614,7 @@ def build_enc_dec(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
             xc = cx(xc)
             h = rms_norm(xc, lp["norm1"]["scale"], cfg.rms_eps)
             q, k, v = qkv_proj(lp["attn"], h, cfg, dtype)
-            a = attention(q, k, v, causal=False)
+            a = attention(q, k, v, causal=False, impl=impl)
             a = checkpoint_name(
                 a.reshape(xc.shape[0], xc.shape[1], -1) @ lp["attn"]["wo"].astype(dtype),
                 "attn_out")
@@ -622,7 +630,7 @@ def build_enc_dec(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
         hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
         q = (x @ lp["xattn"]["wq"].astype(dtype)).reshape(b, s, hq, hd)
         k, v = enc_kv
-        a = attention(q, k, v, causal=False)
+        a = attention(q, k, v, causal=False, impl=impl)
         return a.reshape(b, s, -1) @ lp["xattn"]["wo"].astype(dtype)
 
     def _enc_kv(lp, enc_out):
@@ -644,7 +652,7 @@ def build_enc_dec(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
             h = rms_norm(xc, lp["norm1"]["scale"], cfg.rms_eps)
             q, k, v = qkv_proj(lp["attn"], h, cfg, dtype)
             q, k, v = cq(q), ckv(k), ckv(v)
-            a = cq(attention(q, k, v, causal=True))
+            a = cq(attention(q, k, v, causal=True, impl=impl))
             a = checkpoint_name(
                 a.reshape(xc.shape[0], xc.shape[1], -1) @ lp["attn"]["wo"].astype(dtype),
                 "attn_out")

@@ -3,12 +3,16 @@
 Naming convention matters: leaf names (``wq``, ``wo``, ``gate``, ``down``, ...)
 drive the sharding-rule engine in ``repro.core.sharding``.
 
-Attention comes in two exact implementations (survey §5.1.1):
+Attention comes in three exact implementations (survey §5.1.1):
 
 - :func:`attention_direct` — materializes the score matrix; fine for short seqs.
 - :func:`attention_blockwise` — Rabe–Staats / FlashAttention-style online-softmax
   scan over KV blocks; O(S·B_k) live memory, used for 32k/500k sequences. This is
-  the pure-JAX oracle twin of ``repro.kernels.flash_attention``.
+  the pure-JAX oracle twin (forward and gradient) of the fused kernel.
+- ``repro.kernels.flash_attention`` — fused differentiable Pallas kernel.
+
+:func:`attention` routes between them via ``repro.kernels.dispatch``
+(``ParallelPlan.attn_impl``).
 
 Both support GQA (grouped queries, never materializing repeated KV), causal and
 sliding-window masks (gemma2 local/global alternation), attention-logit softcap,
@@ -124,8 +128,13 @@ def attention_direct(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
 
 
 def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
-                        block_size=1024, scale: Optional[float] = None):
-    """Online-softmax scan over KV blocks; exact, O(S·block) live memory."""
+                        block_size=1024, scale: Optional[float] = None,
+                        kv_len: Optional[int] = None):
+    """Online-softmax scan over KV blocks; exact, O(S·block) live memory.
+
+    ``kv_len`` masks keys at positions >= kv_len — callers pad unaligned KV to
+    the block boundary (see repro.kernels.dispatch) and pass the true length.
+    """
     b, s, hq, hd = q.shape
     t, hkv = k.shape[1], k.shape[2]
     assert t % block_size == 0, (t, block_size)
@@ -146,6 +155,8 @@ def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset
         scores = _softcap(scores, softcap)
         k_pos = blk_idx * block_size + jnp.arange(block_size)
         mask = attn_mask(q_pos, k_pos, causal=causal, window=window)
+        if kv_len is not None and kv_len < t:
+            mask &= (k_pos < kv_len)[None, :]
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
         m_new = jnp.maximum(m, scores.max(axis=-1))
         p = jnp.exp(scores - m_new[..., None]) * mask[None, None, None]
@@ -166,15 +177,18 @@ def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
-              block_size=1024, scale: Optional[float] = None):
-    """Dispatch: direct for short KV, blockwise otherwise."""
-    t = k.shape[1]
-    if t <= 2 * block_size or t % block_size:
-        return attention_direct(q, k, v, causal=causal, window=window,
-                                softcap=softcap, q_offset=q_offset, scale=scale)
-    return attention_blockwise(q, k, v, causal=causal, window=window,
-                               softcap=softcap, q_offset=q_offset,
-                               block_size=block_size, scale=scale)
+              block_size=1024, scale: Optional[float] = None,
+              impl: str = "auto"):
+    """Dispatch to the best implementation for this call site.
+
+    ``impl`` follows ``ParallelPlan.attn_impl`` ("auto" | "xla" | "pallas");
+    the rules live in :mod:`repro.kernels.dispatch`.
+    """
+    # lazy import: kernels.ref imports this module at load time
+    from repro.kernels.dispatch import dispatch_attention  # noqa: PLC0415
+    return dispatch_attention(q, k, v, impl=impl, causal=causal, window=window,
+                              softcap=softcap, q_offset=q_offset,
+                              block_size=block_size, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -212,14 +226,14 @@ def qkv_proj(p, x, cfg, dtype):
 
 
 def attn_block(p, x, cfg, *, positions, window=0, causal=True, dtype=jnp.bfloat16,
-               use_rope=True):
+               use_rope=True, impl="auto"):
     """Full attention sub-block: qkv proj + rope + attention + output proj."""
     q, k, v = qkv_proj(p, x, cfg, dtype)
     if use_rope:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     out = attention(q, k, v, causal=causal, window=window,
-                    softcap=cfg.attn_logit_softcap)
+                    softcap=cfg.attn_logit_softcap, impl=impl)
     b, s = x.shape[:2]
     return out.reshape(b, s, -1) @ p["wo"].astype(dtype)
 

@@ -237,13 +237,12 @@ def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
             aux = jax.lax.pmean(aux, batch_axes)
         return out.reshape(bl, sl, d), aux
 
-    from jax import shard_map  # noqa: PLC0415
+    from repro.core.compat import shard_map  # noqa: PLC0415
 
     out, aux = shard_map(
         local_moe, mesh=mesh,
         in_specs=(pspec_params, pspec_x),
         out_specs=(pspec_x, P()),
-        check_vma=False,
     )({k: p[k] for k in pspec_params}, x)
     return out, aux
 

@@ -23,8 +23,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.models.layers import NEG_INF, _softcap
 
@@ -137,6 +138,5 @@ def decode_attention(
         in_specs=(P(baxes, None, None, None), cache_spec, cache_spec,
                   rep_spec, rep_spec, P()),
         out_specs=(P(baxes, None, None, None), cache_spec, cache_spec),
-        check_vma=False,
     )(qg, k_cache, v_cache, k_new, v_new, pos)
     return out.reshape(b, 1, hq, hd), k_cache, v_cache

@@ -26,9 +26,9 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.config import ModelConfig, ParallelPlan
 from repro.models.families import _decoder_layer_fwd, _embed, _layer_windows, _logits
 from repro.models.layers import rms_norm
@@ -82,6 +82,9 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             toks_mb = tokens_l.reshape(n_micro, mb, s)
             labs_mb = labels_l.reshape(n_micro, mb, s)
 
+            # scalar scan carries break grad-of-shard_map on jax 0.4.x (the
+            # linearization's scalar residuals can't be spec'd per-device) —
+            # every accumulator below is carried as shape (1,) instead
             def stage_fn(x):
                 def body(carry, xs):
                     xc, aux = carry
@@ -89,7 +92,7 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                     xn, a = layer_fwd(xc, lp, w, positions)
                     return (xn, aux + a), None
                 (x, aux), _ = jax.lax.scan(
-                    body, (x, jnp.float32(0.0)),
+                    body, (x, jnp.zeros((1,), jnp.float32)),
                     (params_local["layers"], windows_l[0]))
                 return x, aux
 
@@ -116,13 +119,14 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                 return (buf, loss_sum, aux_sum, tok_count), None
 
             buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
-            init = (buf0, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+            zero = jnp.zeros((1,), jnp.float32)
+            init = (buf0, zero, zero, zero)
             (buf, loss_sum, aux_sum, cnt), _ = jax.lax.scan(
                 tick, init, jnp.arange(n_micro + pp - 1))
             # broadcast the last stage's mean loss to all pods, then average
             # over the data-parallel shards
-            loss = jax.lax.psum(loss_sum, "pod") / n_micro
-            aux = jax.lax.psum(aux_sum, "pod") / n_micro
+            loss = jax.lax.psum(loss_sum[0], "pod") / n_micro
+            aux = jax.lax.psum(aux_sum[0], "pod") / n_micro
             if batch_axes:
                 loss = jax.lax.pmean(loss, batch_axes)
                 aux = jax.lax.pmean(aux, batch_axes)
@@ -135,7 +139,6 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             staged, mesh=mesh,
             in_specs=in_specs,
             out_specs=(P(), P()),
-            check_vma=False,
         )(params, tokens, labels, windows)
         return loss + aux, {"xent": loss, "moe_aux": aux}
 

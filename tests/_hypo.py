@@ -1,0 +1,76 @@
+"""``hypothesis`` or a deterministic fallback.
+
+The property tests import ``given`` / ``settings`` / ``strategies`` from here
+instead of from ``hypothesis`` directly, so the suite collects and runs in
+minimal environments. With the real package installed the re-exports are
+exact; without it, ``given`` runs each test over a small deterministic sample
+(strategy bounds first, then seeded interior draws) and ``settings`` is a
+no-op.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    _N_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sampler, edges=()):
+            self._sampler = sampler        # rng -> value
+            self._edges = tuple(edges)     # always tried first
+
+        def draws(self, n, rng):
+            out = list(self._edges[:n])
+            while len(out) < n:
+                out.append(self._sampler(rng))
+            return out
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             edges=(min_value, max_value,
+                                    (min_value + max_value) // 2))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             edges=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements), edges=elements)
+
+    def given(*arg_strats, **kw_strats):
+        def deco(test):
+            sig = inspect.signature(test)
+            # positional strategies fill the trailing non-keyword params
+            # (hypothesis semantics); everything consumed by a strategy must
+            # disappear from the wrapper's signature or pytest will go
+            # looking for fixtures with those names
+            free = [n for n in sig.parameters if n not in kw_strats]
+            pos_names = free[len(free) - len(arg_strats):] if arg_strats else []
+            strats = dict(zip(pos_names, arg_strats), **kw_strats)
+            remaining = [p for n, p in sig.parameters.items()
+                         if n not in strats]
+
+            @functools.wraps(test)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                cols = {n: s.draws(_N_EXAMPLES, rng)
+                        for n, s in strats.items()}
+                for i in range(_N_EXAMPLES):
+                    test(*args, **kwargs,
+                         **{n: c[i] for n, c in cols.items()})
+
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        return lambda test: test

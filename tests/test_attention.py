@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, strategies as st
 
 from repro.models.layers import (
     attention_blockwise, attention_direct, attn_mask, rope,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, strategies as st
 
 from repro.core import Family, ModelConfig, MoEConfig
 from repro.models.moe import init_moe, moe_dense, router_probs, topk_dispatch

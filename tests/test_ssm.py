@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, strategies as st
 
 from repro.core import ModelConfig, SSMConfig, Family
 from repro.models.ssm import init_ssm, init_ssm_cache, ssd_scan, ssm_block, ssm_step
