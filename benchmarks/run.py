@@ -186,7 +186,7 @@ def bench_train_plans():
 # survey §4.1.5 (MoE dispatch table)
 
 def bench_moe():
-    from repro.kernels import expert_gemm
+    from repro.kernels import dispatch_expert_gemm, expert_gemm
     from repro.kernels.ref import expert_gemm_ref
     cfg = _tiny_cfg(family=Family.MOE, d_ff=0,
                     moe=MoEConfig(num_experts=8, top_k=2, d_expert=256))
@@ -213,6 +213,25 @@ def bench_moe():
     us_k = timeit(lambda: expert_gemm(x, w), iters=1)
     emit("moe.expert_gemm.pallas_interpret", us_k,
          "note=python-interpreted;validates-correctness-not-speed")
+
+    # fwd+bwd through the grouped GEMM (survey §4.1.5): the custom-VJP
+    # backward runs two more grouped GEMMs through the same tiled kernel,
+    # with group_sizes skipping the padding-row tiles of imbalanced experts
+    gs = jnp.asarray([128, 96, 64, 17, 0, 128, 33, 80], jnp.int32)
+    masked_rows = int(gs.sum())
+    flop_frac = masked_rows / (8 * 128)
+
+    def fwdbwd(impl):
+        def loss(x, w):
+            return jnp.sum(dispatch_expert_gemm(x, w, gs, impl=impl))
+        return jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+
+    for name, impl, iters in [("xla", "xla", 3),
+                              ("pallas_interpret", "pallas", 1)]:
+        fn = fwdbwd(impl)
+        us = timeit(lambda: fn(x, w), iters=iters)
+        emit(f"moe.expert_gemm.fwdbwd.{name}", us,
+             f"phase=fwd+bwd;group_sizes_flop_frac={flop_frac:.2f}")
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +260,26 @@ def bench_ssd():
         iters=1)
     emit("ssd.pallas_interpret.l512", us_k,
          "note=python-interpreted;validates-correctness-not-speed")
+
+    # fwd+bwd: XLA autodiff re-materializes the (b, c, h, q, q) decay tensor
+    # for the backward; the fused custom-VJP kernel saves only per-chunk
+    # entering states and recomputes decays tile-by-tile in VMEM
+    from repro.kernels import dispatch_ssd_scan
+    enter_bytes = b * (l // chunk) * h * p * n * 4
+
+    def fwdbwd(impl):
+        def loss(x, dt, B, C):
+            y, _ = dispatch_ssd_scan(x, dt, A, B, C, chunk=chunk, impl=impl)
+            return jnp.sum(y)
+        return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2, 3)))
+
+    for name, impl, iters in [("xla", "xla", 3),
+                              ("pallas_interpret", "pallas", 1)]:
+        fn = fwdbwd(impl)
+        us = timeit(lambda: fn(x, dt, B, C), iters=iters)
+        extra = (f";bwd_decay_hbm_bytes={2 * l_bytes}" if impl == "xla"
+                 else f";entering_state_bytes={enter_bytes}")
+        emit(f"ssd.fwdbwd.{name}.l512", us, f"phase=fwd+bwd{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -341,18 +380,75 @@ BENCHES = {
 }
 
 
+# ---------------------------------------------------------------------------
+# --quick: CI smoke over every fused Pallas kernel
+
+
+def bench_quick():
+    """One tiny shape per fused op, fwd+bwd through ``pallas_call`` in
+    interpret mode — catches kernel regressions that only break under
+    ``pallas_call`` (BlockSpec/grid/scratch plumbing) without a TPU.
+    Raises on non-finite values so scripts/ci.sh fails loudly.
+    """
+    from repro.kernels import (dispatch_expert_gemm, dispatch_ssd_scan,
+                               flash_attention)
+    rng = np.random.default_rng(0)
+
+    def check(name, val, grads):
+        assert np.isfinite(float(val)), f"{name}: non-finite loss"
+        for g in jax.tree.leaves(grads):
+            assert bool(jnp.isfinite(g).all()), f"{name}: non-finite grads"
+
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    attn = jax.value_and_grad(
+        lambda q, k, v: jnp.sum(flash_attention(
+            q, k, v, window=16, softcap=20.0, block_q=32, block_k=32,
+            interpret=True)), argnums=(0, 1, 2))
+    us = timeit(lambda: check("attention", *attn(q, q, q)), warmup=0, iters=1)
+    emit("quick.attention.fwdbwd", us, "interpret=True;finite=True")
+
+    x = jnp.asarray(rng.standard_normal((2, 32, 24)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((2, 24, 16)), jnp.float32)
+    gs = jnp.asarray([20, 0], jnp.int32)
+    gemm = jax.value_and_grad(
+        lambda x, w: jnp.sum(dispatch_expert_gemm(
+            x, w, gs, impl="pallas", block_c=16, block_f=16, block_d=16,
+            interpret=True)), argnums=(0, 1))
+    us = timeit(lambda: check("expert_gemm", *gemm(x, w)), warmup=0, iters=1)
+    emit("quick.expert_gemm.fwdbwd", us, "interpret=True;finite=True")
+
+    b, l, h, p, g, n, chunk = 1, 40, 2, 8, 1, 8, 16   # unaligned l -> padded
+    xs = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dts = jnp.asarray(rng.uniform(0.01, 0.2, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    ssd = jax.value_and_grad(
+        lambda x, dt, B, C: jnp.sum(dispatch_ssd_scan(
+            x, dt, A, B, C, chunk=chunk, impl="pallas", interpret=True)[0]),
+        argnums=(0, 1, 2, 3))
+    us = timeit(lambda: check("ssd", *ssd(xs, dts, B, C)), warmup=0, iters=1)
+    emit("quick.ssd.fwdbwd", us, "interpret=True;finite=True")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="fused-kernel fwd+bwd smoke only (one shape per op, "
+                         "interpret mode) — the scripts/ci.sh regression gate")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows to PATH as JSON "
                          "(machine-readable perf trajectory)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, fn in BENCHES.items():
-        if args.only and not name.startswith(args.only):
-            continue
-        fn()
+    if args.quick:
+        bench_quick()                 # --only doesn't apply to the CI smoke
+    else:
+        for name, fn in BENCHES.items():
+            if args.only and not name.startswith(args.only):
+                continue
+            fn()
     if args.json:
         import json
         recs = []

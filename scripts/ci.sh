@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the one entry point for CI and fresh clones.
 # Mirrors ROADMAP.md: PYTHONPATH=src python -m pytest -x -q
+# then smokes every fused Pallas kernel fwd+bwd under pallas_call (interpret
+# mode, one shape per op) so BlockSpec/grid regressions are caught without a TPU.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python -m benchmarks.run --quick

@@ -207,13 +207,25 @@ class ParallelPlan:
                                    # repro.kernels.dispatch — "auto" picks the
                                    # fused Pallas flash kernel on TPU backends
                                    # and the XLA twins elsewhere.
+    moe_gemm_impl: str = "auto"    # same choices, for the MoE expert GEMMs
+                                   # (survey §4.1.5): "pallas" routes all three
+                                   # SwiGLU GEMMs of _expert_ffn through the
+                                   # differentiable grouped kernel with
+                                   # group_sizes padding-row masking, on both
+                                   # the dense and the EP/shard_map paths.
+    ssm_impl: str = "auto"         # same choices, for the Mamba2 SSD chunk
+                                   # scan: "pallas" keeps the (q, q) decay
+                                   # matrices and the running state in VMEM in
+                                   # both passes (forward saves only per-chunk
+                                   # entering states for the backward).
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
 
     def validate(self, cfg: ModelConfig) -> None:
-        if self.attn_impl not in ("auto", "xla", "pallas"):
-            raise ValueError(
-                f"attn_impl must be auto|xla|pallas, got {self.attn_impl!r}")
+        for knob in ("attn_impl", "moe_gemm_impl", "ssm_impl"):
+            if getattr(self, knob) not in ("auto", "xla", "pallas"):
+                raise ValueError(
+                    f"{knob} must be auto|xla|pallas, got {getattr(self, knob)!r}")
         if self.ep and cfg.family != Family.MOE:
             raise ValueError(f"expert parallelism requires a MoE arch, got {cfg.family}")
         if self.ep and self.dp_over_model:

@@ -1,24 +1,29 @@
-"""Kernel dispatch — pick an attention implementation per call site.
+"""Kernel dispatch — pick an implementation per call site, per op.
 
-This is the architecture hook for every fused kernel: model code calls
-:func:`dispatch_attention` (via ``repro.models.layers.attention``) with
-``impl = plan.attn_impl`` and the dispatcher decides, per call site, whether
-the fused Pallas kernel or the XLA twins run. Rules:
+This is the architecture hook for every fused kernel: model code calls the
+per-op dispatcher (:func:`dispatch_attention` via ``repro.models.layers``,
+:func:`dispatch_expert_gemm` via ``repro.models.moe._expert_ffn``,
+:func:`dispatch_ssd_scan` via ``repro.models.ssm.ssm_block``) with the
+matching ``ParallelPlan`` knob (``attn_impl`` / ``moe_gemm_impl`` /
+``ssm_impl``), and the dispatcher decides, per call site, whether the fused
+Pallas kernel or the XLA twin runs. Shared rules (:func:`_resolve_choice`):
 
-- ``impl="xla"``    — always the pure-XLA twins: ``attention_direct`` for
-  short KV, ``attention_blockwise`` otherwise (KV padded to the block
-  boundary when the length doesn't divide, so long unaligned contexts never
-  fall back to the quadratic path).
-- ``impl="pallas"`` — the fused flash kernel whenever the mask parameters are
-  static; traced masks (gemma2 local/global alternation scans the window as
-  layer metadata) fall back to XLA since Pallas masks are compile-time.
-- ``impl="auto"``   — Pallas iff running on a TPU backend with static mask
-  parameters and a lane-friendly head_dim; XLA otherwise. Off-TPU the Pallas
-  interpreter validates correctness but is orders of magnitude slower, so
-  auto never selects it — tests and benchmarks opt in with ``impl="pallas"``.
+- ``impl="xla"``    — always the pure-XLA twin (also the gradient oracle).
+- ``impl="pallas"`` — the fused kernel whenever its static preconditions hold
+  (attention: compile-time mask params; SSD: no initial state); XLA otherwise.
+- ``impl="auto"``   — Pallas iff running on a TPU backend and the
+  preconditions hold. Off-TPU the Pallas interpreter validates correctness
+  but is orders of magnitude slower, so auto never selects it — tests and
+  benchmarks opt in with ``impl="pallas"``.
 
-Layouts: model code uses (B, S, H, hd); the kernel uses head-major
-(B, H, S, hd). The dispatcher owns the transposes.
+Every fused kernel here is differentiable (``jax.custom_vjp`` recompute
+backwards), so the dispatchers sit on the training path, not just prefill.
+
+Layout contracts: model code uses batch-major layouts ((B, S, H, hd) for
+attention, (B, L, H, P) for SSD); the kernels use head-major. The dispatchers
+own the transposes, plus the boundary padding for unaligned lengths (KV to the
+block boundary for blockwise attention, the sequence to the chunk boundary for
+SSD — never a silent fall-back to a quadratic whole-sequence path).
 """
 
 from __future__ import annotations
@@ -26,10 +31,13 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as _layers
 from .flash_attention import _pad_seq, flash_attention, resolve_interpret
+from .grouped_gemm import expert_gemm
+from .ssd_scan import ssd_chunk_scan
 
 IMPLS = ("auto", "xla", "pallas")
 
@@ -38,19 +46,48 @@ def _is_static(x) -> bool:
     return isinstance(x, (int, np.integer))
 
 
-def select_impl(impl: str, *, head_dim: int, window, q_offset) -> str:
-    """Resolve "auto"/"pallas"/"xla" to the implementation that will run."""
+def _resolve_choice(impl: str, *, knob: str, explicit_ok: bool,
+                    auto_ok: bool) -> str:
+    """Shared auto|xla|pallas resolution. ``explicit_ok`` gates an explicit
+    ``"pallas"`` request (hard preconditions); ``auto_ok`` additionally gates
+    ``"auto"`` (soft preferences like lane-friendly shapes)."""
     if impl not in IMPLS:
-        raise ValueError(f"attn_impl must be one of {IMPLS}, got {impl!r}")
+        raise ValueError(f"{knob} must be one of {IMPLS}, got {impl!r}")
     if impl == "xla":
         return "xla"
-    static = _is_static(window) and _is_static(q_offset)
     if impl == "pallas":
-        return "pallas" if static else "xla"
-    if (static and jax.default_backend() == "tpu"
-            and head_dim % 8 == 0 and head_dim <= 256):
+        return "pallas" if explicit_ok else "xla"
+    if explicit_ok and auto_ok and jax.default_backend() == "tpu":
         return "pallas"
     return "xla"
+
+
+def select_impl(impl: str, *, head_dim: int, window, q_offset) -> str:
+    """Resolve the attention impl. Traced mask params (gemma2 local/global
+    alternation scans the window as layer metadata) force XLA since Pallas
+    masks are compile-time."""
+    static = _is_static(window) and _is_static(q_offset)
+    return _resolve_choice(
+        impl, knob="attn_impl", explicit_ok=static,
+        auto_ok=head_dim % 8 == 0 and head_dim <= 256)
+
+
+def select_gemm_impl(impl: str) -> str:
+    """Resolve the expert-GEMM impl (the kernel pads every dim, so an explicit
+    "pallas" is always honored)."""
+    return _resolve_choice(impl, knob="moe_gemm_impl", explicit_ok=True,
+                           auto_ok=True)
+
+
+def select_ssd_impl(impl: str, *, has_initial_state: bool = False) -> str:
+    """Resolve the SSD impl. The fused kernel starts from a zero state, so a
+    caller-supplied initial state falls back to the XLA scan."""
+    return _resolve_choice(impl, knob="ssm_impl",
+                           explicit_ok=not has_initial_state, auto_ok=True)
+
+
+# ---------------------------------------------------------------------------
+# attention
 
 
 def dispatch_attention(q, k, v, *, impl: str = "auto", causal: bool = True,
@@ -87,3 +124,63 @@ def dispatch_attention(q, k, v, *, impl: str = "auto", causal: bool = True,
     return _layers.attention_blockwise(
         q, k, v, causal=causal, window=window, softcap=softcap,
         q_offset=q_offset, block_size=block_size, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert GEMM
+
+
+def dispatch_expert_gemm(x, w, group_sizes=None, *, impl: str = "auto",
+                         block_c: int = 128, block_f: int = 128,
+                         block_d: int = 256,
+                         interpret: Optional[bool] = None):
+    """x: (E, C, d) × w: (E, d, f) -> (E, C, f); ``group_sizes`` (E,) marks the
+    real rows per expert (padding rows are masked out of outputs and grads)."""
+    choice = select_gemm_impl(impl)
+    if choice == "pallas":
+        return expert_gemm(x, w, group_sizes, block_c=block_c,
+                           block_f=block_f, block_d=block_d,
+                           interpret=resolve_interpret(interpret))
+    if group_sizes is not None:
+        rows = jnp.arange(x.shape[1])[None, :, None]
+        x = jnp.where(rows < jax.lax.stop_gradient(group_sizes)[:, None, None],
+                      x, 0)
+    return jnp.einsum("ecd,edf->ecf", x, w)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunk scan
+
+
+def dispatch_ssd_scan(x, dt, A, B, C, *, chunk: int, impl: str = "auto",
+                      initial_state=None,
+                      interpret: Optional[bool] = None):
+    """Model layout: x (B, L, H, P), dt (B, L, H), A (H,), B/C (B, L, G, N).
+    Returns (y (B, L, H, P) fp32, final_state (B, H, P, N) fp32).
+
+    Unaligned lengths are padded to the chunk boundary with ``dt = 0`` steps
+    (decay exp(0)=1, zero input: the state rides through unchanged), never
+    collapsed into one whole-sequence chunk with an O(L²) decay matrix.
+    """
+    from repro.models.ssm import ssd_scan  # noqa: PLC0415 (import cycle)
+
+    b, l, h, p = x.shape
+    chunk = min(int(chunk), l)
+    l_pad = -(-l // chunk) * chunk
+    if l_pad != l:
+        x = _pad_seq(x, 1, l_pad)
+        dt = _pad_seq(dt, 1, l_pad)
+        B = _pad_seq(B, 1, l_pad)
+        C = _pad_seq(C, 1, l_pad)
+
+    choice = select_ssd_impl(impl, has_initial_state=initial_state is not None)
+    if choice == "pallas":
+        y, state = ssd_chunk_scan(
+            x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A,
+            B.transpose(0, 2, 1, 3), C.transpose(0, 2, 1, 3), chunk=chunk,
+            interpret=resolve_interpret(interpret))
+        y = y.transpose(0, 2, 1, 3)
+    else:
+        y, state = ssd_scan(x, dt, A, B, C, chunk=chunk,
+                            initial_state=initial_state)
+    return y[:, :l], state

@@ -1,4 +1,5 @@
-"""Per-expert batched GEMM — Pallas TPU kernel (survey §4.1.5, MegaBlocks-style).
+"""Per-expert batched GEMM — differentiable Pallas TPU kernel (survey §4.1.5,
+MegaBlocks-style).
 
 MoE expert compute is `(E, C, d) × (E, d, f) -> (E, C, f)`: one GEMM per expert
 over its capacity buffer. On GPU MegaBlocks lowers this to block-sparse GEMM
@@ -11,9 +12,23 @@ GEMM on the MXU:
 - block shapes 128-aligned; weights stream through VMEM one (block_d, block_f)
   tile at a time so arbitrarily large experts never exceed the VMEM budget.
 
-An optional ``group_sizes`` argument masks padding rows (tokens beyond an
-expert's actual load), saving the dominant fraction of FLOPs when experts are
-imbalanced — the dropless-MoE motivation, adapted to fixed capacity.
+``group_sizes`` (an ``(E,)`` int32 array) marks how many leading rows of each
+expert's capacity buffer hold real tokens. Row tiles whose start index is past
+the expert's load are skipped entirely (``pl.when`` on the whole tile) and the
+straddling tile is masked at the output write — the dropless-MoE FLOP saving,
+adapted to fixed capacity. ``group_sizes=None`` keeps every row.
+
+Backward (the FlashAttention-2 analogue for GEMMs): ``jax.custom_vjp`` runs two
+more grouped GEMMs through the same tiled kernel —
+
+- ``dx = dy · wᵀ``   row-masked by ``group_sizes`` (padding rows get zero grad);
+- ``dw = xᵀ · dy``   with ``group_sizes`` masking the *contraction* dim instead
+  (padding rows must not contribute to weight gradients), via the kernel's
+  ``mask="contract"`` mode that zeroes weight-tile rows past the group size and
+  skips fully-padded contraction tiles.
+
+``interpret=None`` auto-detects the backend like flash_attention: compiled on
+TPU, interpreter everywhere else.
 """
 
 from __future__ import annotations
@@ -26,39 +41,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .flash_attention import resolve_interpret
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_dsteps: int):
+MASK_MODES = ("rows", "contract")
+
+
+def _kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *, n_dsteps: int,
+            block_r: int, block_k: int, mask: str):
+    ri = pl.program_id(1)
     di = pl.program_id(3)
 
     @pl.when(di == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0].astype(jnp.float32)       # (bc, bd)
-    w = w_ref[0].astype(jnp.float32)       # (bd, bf)
-    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+    gs = gs_ref[0]
+    # whole-tile skip: row tiles past the expert's load ("rows") or contraction
+    # tiles made of padding rows ("contract") contribute nothing
+    relevant = (ri * block_r < gs) if mask == "rows" else (di * block_k < gs)
+
+    @pl.when(relevant)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)       # (br, bk)
+        w = w_ref[0].astype(jnp.float32)       # (bk, bf)
+        if mask == "contract":
+            # zero the padding rows of the weight tile (global contraction
+            # index >= group size); zeroing either operand's slice suffices
+            kidx = di * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, w.shape, 0)
+            w = jnp.where(kidx < gs, w, 0.0)
+        acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(di == n_dsteps - 1)
     def _finish():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if mask == "rows":
+            ridx = ri * block_r + jax.lax.broadcasted_iota(
+                jnp.int32, acc.shape, 0)
+            acc = jnp.where(ridx < gs, acc, 0.0)
+        o_ref[0] = acc.astype(o_ref.dtype)
 
 
-def expert_gemm(
-    x: jax.Array,                 # (E, C, d)
-    w: jax.Array,                 # (E, d, f)
-    *,
-    block_c: int = 128,
-    block_f: int = 128,
-    block_d: int = 256,
-    interpret: bool = True,
-) -> jax.Array:
-    e, c, d = x.shape
+def _grouped_gemm(x, w, gs, *, mask: str, block_r: int, block_co: int,
+                  block_k: int, interpret: bool):
+    """(E, R, K) × (E, K, F) -> (E, R, F), masked by per-expert ``gs``."""
+    assert mask in MASK_MODES, mask
+    e, r, k = x.shape
     f = w.shape[-1]
-    assert w.shape == (e, d, f), (x.shape, w.shape)
+    assert w.shape == (e, k, f), (x.shape, w.shape)
 
-    block_c = min(block_c, c)
-    block_f = min(block_f, f)
-    block_d = min(block_d, d)
+    block_r = min(block_r, r)
+    block_co = min(block_co, f)
+    block_k = min(block_k, k)
 
     def pad_to(a, dim, blk):
         rem = (-a.shape[dim]) % blk
@@ -68,24 +102,80 @@ def expert_gemm(
         pads[dim] = (0, rem)
         return jnp.pad(a, pads)
 
-    xp = pad_to(pad_to(x, 1, block_c), 2, block_d)
-    wp = pad_to(pad_to(w, 1, block_d), 2, block_f)
-    cp, dp, fp = xp.shape[1], xp.shape[2], wp.shape[2]
-    grid = (e, cp // block_c, fp // block_f, dp // block_d)
+    xp = pad_to(pad_to(x, 1, block_r), 2, block_k)
+    wp = pad_to(pad_to(w, 1, block_k), 2, block_co)
+    rp, kp, fp = xp.shape[1], xp.shape[2], wp.shape[2]
+    grid = (e, rp // block_r, fp // block_co, kp // block_k)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n_dsteps=grid[3]),
+        functools.partial(_kernel, n_dsteps=grid[3], block_r=block_r,
+                          block_k=block_k, mask=mask),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_c, block_d),
-                         lambda ei, ci, fi, di: (ei, ci, di)),
-            pl.BlockSpec((1, block_d, block_f),
-                         lambda ei, ci, fi, di: (ei, di, fi)),
+            pl.BlockSpec((1,), lambda ei, ri, fi, di: (ei,)),
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda ei, ri, fi, di: (ei, ri, di)),
+            pl.BlockSpec((1, block_k, block_co),
+                         lambda ei, ri, fi, di: (ei, di, fi)),
         ],
-        out_specs=pl.BlockSpec((1, block_c, block_f),
-                               lambda ei, ci, fi, di: (ei, ci, fi)),
-        out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        out_specs=pl.BlockSpec((1, block_r, block_co),
+                               lambda ei, ri, fi, di: (ei, ri, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, rp, fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_r, block_co), jnp.float32)],
         interpret=interpret,
-    )(xp, wp)
-    return out[:, :c, :f]
+    )(gs, xp, wp)
+    return out[:, :r, :f]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _gemm(x, w, gs, block_c, block_f, block_d, interpret):
+    return _grouped_gemm(x, w, gs, mask="rows", block_r=block_c,
+                         block_co=block_f, block_k=block_d,
+                         interpret=interpret)
+
+
+def _gemm_fwd(x, w, gs, block_c, block_f, block_d, interpret):
+    out = _gemm(x, w, gs, block_c, block_f, block_d, interpret)
+    return out, (x, w, gs)
+
+
+def _gemm_bwd(block_c, block_f, block_d, interpret, res, g):
+    x, w, gs = res
+    # dx = dy · wᵀ — row-masked: padding rows never reached the output, so
+    # their cotangent is zero (also skips their tiles entirely)
+    dx = _grouped_gemm(g, w.transpose(0, 2, 1), gs, mask="rows",
+                       block_r=block_c, block_co=block_d, block_k=block_f,
+                       interpret=interpret)
+    # dw = xᵀ · dy — contraction-masked: only real rows contribute to the
+    # weight gradient
+    dw = _grouped_gemm(x.transpose(0, 2, 1), g, gs, mask="contract",
+                       block_r=block_d, block_co=block_f, block_k=block_c,
+                       interpret=interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+_gemm.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+def expert_gemm(
+    x: jax.Array,                 # (E, C, d)
+    w: jax.Array,                 # (E, d, f)
+    group_sizes: Optional[jax.Array] = None,   # (E,) int32 real rows per expert
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: Optional[bool] = None,   # None -> compiled on TPU, interpreted elsewhere
+) -> jax.Array:
+    """Fused differentiable per-expert GEMM; see module docstring."""
+    e, c, _ = x.shape
+    if group_sizes is None:
+        gs = jnp.full((e,), c, jnp.int32)
+    else:
+        gs = jax.lax.stop_gradient(group_sizes).astype(jnp.int32)
+    return _gemm(x, w, gs, int(block_c), int(block_f), int(block_d),
+                 resolve_interpret(interpret))

@@ -1,9 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 These are the entry points model layers reach through the dispatch layer
-(``repro.kernels.dispatch``, driven by ``ParallelPlan.attn_impl``). On real
-TPU hardware they compile; the CPU container exercises them in interpret mode
-(``interpret=None`` auto-detects the backend).
+(``repro.kernels.dispatch``, driven by ``ParallelPlan.attn_impl`` /
+``moe_gemm_impl`` / ``ssm_impl``). On real TPU hardware they compile; the CPU
+container exercises them in interpret mode (``interpret=None`` auto-detects
+the backend for every op). All three are differentiable — ``jax.grad``
+through them runs the custom-VJP Pallas backward kernels.
 """
 
 from __future__ import annotations
@@ -34,14 +36,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
 
 @functools.partial(jax.jit, static_argnames=(
     "block_c", "block_f", "block_d", "interpret"))
-def expert_gemm(x, w, *, block_c=128, block_f=128, block_d=256, interpret=True):
-    """(E, C, d) × (E, d, f) -> (E, C, f) per-expert GEMM."""
-    return _expert_gemm(x, w, block_c=block_c, block_f=block_f,
+def expert_gemm(x, w, group_sizes=None, *, block_c=128, block_f=128,
+                block_d=256, interpret=None):
+    """(E, C, d) × (E, d, f) -> (E, C, f) per-expert GEMM; ``group_sizes``
+    masks each expert's padding rows out of the output and both gradients.
+
+    Differentiable: the backward runs two more grouped GEMMs (dx = dy·wᵀ,
+    dw = xᵀ·dy) through the same tiled kernel (see grouped_gemm.py).
+    """
+    return _expert_gemm(x, w, group_sizes, block_c=block_c, block_f=block_f,
                         block_d=block_d, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=True):
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     """Fused Mamba2 SSD: (B,H,L,P) inputs -> (y, final_state); the intra-chunk
-    decay matrices and the running state stay in VMEM."""
+    decay matrices and the running state stay in VMEM.
+
+    Differentiable: the forward saves only per-chunk entering states and the
+    backward kernel recomputes the decay/score tiles (see ssd_scan.py).
+    """
     return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

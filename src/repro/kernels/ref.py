@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose + gradient reference)."""
 
 from __future__ import annotations
 
@@ -21,8 +21,13 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-def expert_gemm_ref(x, w):
-    """x: (E, C, d), w: (E, d, f) -> (E, C, f) batched per-expert GEMM."""
+def expert_gemm_ref(x, w, group_sizes=None):
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f) batched per-expert GEMM.
+    ``group_sizes`` (E,) zeroes each expert's padding rows (same semantics as
+    the kernel's row masking)."""
+    if group_sizes is not None:
+        rows = jnp.arange(x.shape[1])[None, :, None]
+        x = jnp.where(rows < group_sizes[:, None, None], x, 0)
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
 

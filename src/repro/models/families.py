@@ -386,7 +386,7 @@ def build_ssm(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
         def body(carry, lp):
             xc = cx(carry)
             h = rms_norm(xc, lp["norm1"]["scale"], cfg.rms_eps)
-            y = ssm_lib.ssm_block(lp["ssm"], h, cfg, dtype)
+            y = ssm_lib.ssm_block(lp["ssm"], h, cfg, dtype, plan=plan)
             y = checkpoint_name(y, "block_out")
             return xc + y, None
 
@@ -460,7 +460,7 @@ def build_hybrid(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
         def body(xc, lp):
             xc = cx(xc)
             h = rms_norm(xc, lp["norm1"]["scale"], cfg.rms_eps)
-            y = ssm_lib.ssm_block(lp["ssm"], h, cfg, dtype)
+            y = ssm_lib.ssm_block(lp["ssm"], h, cfg, dtype, plan=plan)
             y = checkpoint_name(y, "block_out")
             return xc + y, None
         x, _ = jax.lax.scan(_remat(body, remat_mode), x, stacked)

@@ -134,17 +134,42 @@ def _gather_from_buffers(h, slot, weights, dtype):
     return (out * weights[..., None].astype(dtype)).sum(axis=1)
 
 
-def _expert_ffn(w, h, dtype):
-    """h: (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
-    g = jnp.einsum("ecd,edf->ecf", h, w["gate"].astype(dtype))
-    u = jnp.einsum("ecd,edf->ecf", h, w["up"].astype(dtype))
-    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w["down"].astype(dtype))
+def _group_sizes_from_dispatch(dispatch):
+    """(N, E, C) dispatch tensor -> (E,) int32 real-row count per expert."""
+    return jax.lax.stop_gradient(dispatch).sum(axis=(0, 2)).astype(jnp.int32)
+
+
+def _group_sizes_from_slots(slot, num_experts: int, capacity: int):
+    """(N, k) capacity-buffer indices -> (E,) int32 real-row count per expert.
+    Valid because the scatter dispatch assigns positions compactly per expert
+    (rows [0, count) are exactly the filled ones)."""
+    kept = slot < num_experts * capacity
+    eo = jax.nn.one_hot(jnp.where(kept, slot // capacity, num_experts),
+                        num_experts + 1, dtype=jnp.int32)
+    return jax.lax.stop_gradient(eo.sum(axis=(0, 1))[:num_experts])
+
+
+def _expert_ffn(w, h, dtype, impl: str = "auto", group_sizes=None):
+    """h: (E, C, d) -> (E, C, d) through per-expert SwiGLU.
+
+    All three GEMMs go through :func:`dispatch_expert_gemm`
+    (``impl = plan.moe_gemm_impl``); ``group_sizes`` masks each expert's
+    padding rows out of the compute and the gradients (the fused kernel skips
+    fully-padded row tiles — the dropless-MoE FLOP saving).
+    """
+    from repro.kernels.dispatch import dispatch_expert_gemm  # noqa: PLC0415
+
+    g = dispatch_expert_gemm(h, w["gate"].astype(dtype), group_sizes, impl=impl)
+    u = dispatch_expert_gemm(h, w["up"].astype(dtype), group_sizes, impl=impl)
+    return dispatch_expert_gemm(jax.nn.silu(g) * u, w["down"].astype(dtype),
+                                group_sizes, impl=impl)
 
 
 # ---------------------------------------------------------------------------
 # dense-dispatch path (baseline)
 
-def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum"):
+def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum",
+              gemm_impl: str = "auto"):
     """x: (B, S, d) -> (out, aux_loss). GSPMD-sharded local dispatch."""
     e = cfg.moe
     b, s, d = x.shape
@@ -155,13 +180,15 @@ def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum"):
     probs, aux = router_probs(p, xf, cfg, dtype)
     if dispatch_mode == "scatter":
         slot, wts = topk_scatter_dispatch(probs, cfg, capacity)
+        gs = _group_sizes_from_slots(slot, e.num_experts, capacity)
         h = _scatter_to_buffers(xf, slot, cfg, capacity)
-        h = _expert_ffn(p["experts"], h, dtype)
+        h = _expert_ffn(p["experts"], h, dtype, gemm_impl, gs)
         out = _gather_from_buffers(h, slot, wts, dtype)
     else:
         dispatch, combine = topk_dispatch(probs, cfg, capacity)
+        gs = _group_sizes_from_dispatch(dispatch)
         h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
-        h = _expert_ffn(p["experts"], h, dtype)
+        h = _expert_ffn(p["experts"], h, dtype, gemm_impl, gs)
         out = jnp.einsum("nec,ecd->nd", combine.astype(dtype), h)
 
     if e.num_shared_experts:
@@ -175,7 +202,7 @@ def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum"):
 # expert-parallel path (shard_map + all_to_all)
 
 def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
-           dispatch_mode: str = "einsum"):
+           dispatch_mode: str = "einsum", gemm_impl: str = "auto"):
     """Expert-parallel MoE. x: (B, S, d) with B sharded over ``batch_axes``.
 
     Inside the shard_map the MoE block's tokens are also sequence-sharded over
@@ -217,7 +244,10 @@ def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
         h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
         # h: (tp, e_local, C, d) — rows now from each peer, for MY experts
         h = h.transpose(1, 0, 2, 3).reshape(e_local, tp * capacity, d)
-        h = _expert_ffn(pl["experts"], h, dtype)
+        # rows arrive blocked per source peer ([peer0 cap | peer1 cap | ...]),
+        # not compacted, so prefix group_sizes masking doesn't apply here —
+        # padding rows are zero and drop out of the GEMMs numerically
+        h = _expert_ffn(pl["experts"], h, dtype, gemm_impl)
         # return trip
         h = h.reshape(e_local, tp, capacity, d).transpose(1, 0, 2, 3)
         h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
@@ -254,11 +284,12 @@ def moe_block(p, x, cfg: ModelConfig, dtype, mesh=None, plan=None, batch_axes=("
     seq % tp == 0; decode steps (S=1) and smoke configs fall back to dense.
     """
     mode = plan.moe_dispatch if plan is not None else "einsum"
+    gemm_impl = plan.moe_gemm_impl if plan is not None else "auto"
     if (plan is not None and plan.ep and mesh is not None
             and x.shape[1] % mesh.shape["model"] == 0
             and x.shape[0] % _axes_size(mesh, batch_axes) == 0):
-        return moe_ep(p, x, cfg, dtype, mesh, batch_axes, mode)
-    return moe_dense(p, x, cfg, dtype, mode)
+        return moe_ep(p, x, cfg, dtype, mesh, batch_axes, mode, gemm_impl)
+    return moe_dense(p, x, cfg, dtype, mode, gemm_impl)
 
 
 def _axes_size(mesh, axes) -> int:

@@ -132,8 +132,17 @@ def ssd_scan(x, dt, A, B, C, chunk: int, initial_state=None):
     return y, final
 
 
-def ssm_block(p, x, cfg: ModelConfig, dtype, initial_state=None):
-    """Full Mamba2 block forward. x: (B, L, d) -> (B, L, d)."""
+def ssm_block(p, x, cfg: ModelConfig, dtype, initial_state=None, plan=None):
+    """Full Mamba2 block forward. x: (B, L, d) -> (B, L, d).
+
+    The SSD scan runs through :func:`repro.kernels.dispatch.dispatch_ssd_scan`
+    (``impl = plan.ssm_impl``): the fused Pallas kernel keeps decay matrices
+    in VMEM in both passes; the XLA twin is this module's :func:`ssd_scan`.
+    Unaligned lengths are padded to the chunk boundary by the dispatcher —
+    never collapsed into one whole-sequence chunk with an O(L²) decay matrix.
+    """
+    from repro.kernels.dispatch import dispatch_ssd_scan  # noqa: PLC0415
+
     s = cfg.ssm
     di, nh, g, n = ssm_dims(cfg)
     b, l, d = x.shape
@@ -151,9 +160,10 @@ def ssm_block(p, x, cfg: ModelConfig, dtype, initial_state=None):
 
     A = -jnp.exp(p["A_log"])                                  # (nh,)
     xh = xin.reshape(b, l, nh, s.head_dim)
-    chunk = s.chunk if l % s.chunk == 0 else l
-    y, _ = ssd_scan(xh, dt, A, Bv.reshape(b, l, g, n), Cv.reshape(b, l, g, n),
-                    chunk=chunk)
+    y, _ = dispatch_ssd_scan(
+        xh, dt, A, Bv.reshape(b, l, g, n), Cv.reshape(b, l, g, n),
+        chunk=s.chunk, impl=plan.ssm_impl if plan is not None else "auto",
+        initial_state=initial_state)
     y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(b, l, di).astype(dtype)
     y = rms_norm(y * jax.nn.silu(z), p["scale"], cfg.rms_eps)
