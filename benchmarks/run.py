@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Family, InputShape, ModelConfig, MoEConfig, ParallelPlan
+from repro.core import (Family, InputShape, ModelConfig, MoEConfig,
+                        ParallelPlan, SSMConfig)
 from repro.core import sharding as shardlib
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticDataset
@@ -283,6 +284,48 @@ def bench_ssd():
 
 
 # ---------------------------------------------------------------------------
+# survey §6.1/§6.2 (memory-lean training path: remat × family trade-off table)
+
+def bench_trainstep():
+    """Peak-live-memory vs step-time per remat policy, per family — the §6.1
+    trade-off the 1F1B/remat/ZeRO-1 path exists to exploit. ``us_per_call`` is
+    a real jitted step; ``peak_temp_bytes`` comes from
+    ``jax.stages.Compiled.memory_analysis()`` (XLA's buffer assignment for the
+    step's live intermediates, the quantity remat actually shrinks).
+    The GPipe-vs-1F1B compiled-memory ordering needs a multi-device mesh and
+    is asserted in tests/test_train_memory.py instead.
+    """
+    shape = InputShape("b", 64, 8, "train")
+    fams = [
+        ("dense", _tiny_cfg(n_layers=4)),
+        ("moe", _tiny_cfg(n_layers=4, family=Family.MOE, d_ff=0,
+                          moe=MoEConfig(num_experts=4, top_k=2, d_expert=128))),
+        ("ssm", _tiny_cfg(n_layers=4, n_heads=0, n_kv_heads=0, d_ff=0,
+                          family=Family.SSM,
+                          ssm=SSMConfig(d_state=16, head_dim=32, expand=2))),
+    ]
+    toks = shape.global_batch * shape.seq_len
+    for fam_name, cfg in fams:
+        ds = SyntheticDataset(cfg, shape)
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+        for remat in ("none", "selective", "full"):
+            plan = ParallelPlan(remat=remat, compute_dtype="float32")
+            model = build_model(cfg, plan)
+            state = init_train_state(model, jax.random.PRNGKey(0))
+            step = jax.jit(make_train_step(model, plan, Hyper(total_steps=10)))
+            # AOT-compile once and time the Compiled directly (a jit call
+            # would not reuse this executable and would compile again)
+            compiled = step.lower(state, batch).compile()
+            ma = compiled.memory_analysis()
+            temp = getattr(ma, "temp_size_in_bytes", None) if ma else None
+            args = getattr(ma, "argument_size_in_bytes", None) if ma else None
+            us = timeit(compiled, state, batch, warmup=1, iters=3)
+            emit(f"trainstep.{fam_name}.remat_{remat}", us,
+                 f"tokens_per_s={toks/(us/1e6):.0f};peak_temp_bytes={temp};"
+                 f"arg_bytes={args}")
+
+
+# ---------------------------------------------------------------------------
 # survey §8.3 (checkpointing latency table)
 
 def bench_checkpoint(tmp="/tmp/repro_bench_ckpt"):
@@ -374,6 +417,7 @@ BENCHES = {
     "train": bench_train_plans,
     "moe": bench_moe,
     "ssd": bench_ssd,
+    "trainstep": bench_trainstep,
     "ckpt": bench_checkpoint,
     "ft": bench_fault_tolerance,
     "decode": bench_decode,
@@ -429,6 +473,30 @@ def bench_quick():
         argnums=(0, 1, 2, 3))
     us = timeit(lambda: check("ssd", *ssd(xs, dts, B, C)), warmup=0, iters=1)
     emit("quick.ssd.fwdbwd", us, "interpret=True;finite=True")
+
+    # memory-lean train step: one jitted step under the production recipe
+    # (selective remat) with compiled-memory introspection — catches remat
+    # policy / ZeRO plumbing regressions without a mesh
+    cfg = _tiny_cfg()
+    shape = InputShape("b", 32, 4, "train")
+    ds = SyntheticDataset(cfg, shape)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+    plan = ParallelPlan(remat="selective", compute_dtype="float32")
+    model = build_model(cfg, plan)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, plan, Hyper(total_steps=10)))
+    compiled = step.lower(state, batch).compile()
+    ma = compiled.memory_analysis()
+    temp = getattr(ma, "temp_size_in_bytes", None) if ma else None
+
+    def run_step():
+        _, metrics = compiled(state, batch)
+        assert np.isfinite(float(metrics["loss"])), "trainstep: non-finite loss"
+        return metrics["loss"]
+
+    us = timeit(run_step, warmup=0, iters=1)
+    emit("quick.trainstep.selective", us,
+         f"remat=selective;finite=True;peak_temp_bytes={temp}")
 
 
 def main() -> None:

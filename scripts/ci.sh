@@ -2,9 +2,11 @@
 # Tier-1 verification — the one entry point for CI and fresh clones.
 # Mirrors ROADMAP.md: PYTHONPATH=src python -m pytest -x -q
 # then smokes every fused Pallas kernel fwd+bwd under pallas_call (interpret
-# mode, one shape per op) so BlockSpec/grid regressions are caught without a TPU.
+# mode, one shape per op) plus a selective-remat train step, and records the
+# remat-policy peak-memory/step-time trade-off to BENCH_trainstep.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python -m benchmarks.run --quick
+python -m benchmarks.run --only trainstep --json BENCH_trainstep.json

@@ -180,8 +180,24 @@ class ParallelPlan:
     zero_stage: int = 1            # 0: replicated opt state, 1: shard over data axis
     ep: bool = False               # expert parallelism (all-to-all) for MoE layers
     pp: int = 1                    # pipeline stages over pod axis (1 = pure DP pods)
+    pp_schedule: str = "1f1b"      # pipeline schedule (§4.1.3): "gpipe" is
+                                   # fill-drain with reverse-AD through the
+                                   # forward scan (keeps O(M) microbatches of
+                                   # activations live); "1f1b" is a custom-VJP
+                                   # one-forward-one-backward schedule whose
+                                   # backward scan interleaves the mirrored
+                                   # drain with forward recompute ticks —
+                                   # same loss/grads, O(P) stages of in-flight
+                                   # activations.
     microbatches: int = 1          # grad-accumulation / pipeline microbatches
-    remat: str = "full"            # none | selective | full   (§6.1)
+    remat: str = "full"            # activation recomputation (§6.1), applied
+                                   # per decoder layer: "none" saves every
+                                   # intermediate, "full" recomputes the whole
+                                   # layer in the backward, "selective" saves
+                                   # only the fused-kernel outputs (flash-attn
+                                   # out+lse, expert-GEMM out, SSD chunk
+                                   # states — the residuals the custom VJPs
+                                   # consume) and recomputes the cheap glue.
     seq_shard_decode: bool = True  # shard KV cache seq dim over model axis
     seq_shard_attn: bool = True    # Megatron-SP/context-parallel: shard the
                                    # query-sequence dim of attention over
@@ -226,6 +242,12 @@ class ParallelPlan:
             if getattr(self, knob) not in ("auto", "xla", "pallas"):
                 raise ValueError(
                     f"{knob} must be auto|xla|pallas, got {getattr(self, knob)!r}")
+        if self.remat not in ("none", "selective", "full"):
+            raise ValueError(
+                f"remat must be none|selective|full, got {self.remat!r}")
+        if self.pp_schedule not in ("gpipe", "1f1b"):
+            raise ValueError(
+                f"pp_schedule must be gpipe|1f1b, got {self.pp_schedule!r}")
         if self.ep and cfg.family != Family.MOE:
             raise ValueError(f"expert parallelism requires a MoE arch, got {cfg.family}")
         if self.ep and self.dp_over_model:

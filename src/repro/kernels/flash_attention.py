@@ -48,6 +48,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
@@ -408,6 +409,11 @@ def _flash_fwd(q, k, v, causal, window, softcap, scale, q_offset, block_q,
                block_k, interpret):
     o, lse = _flash_forward(q, k, v, causal, window, softcap, scale, q_offset,
                             block_q, block_k, interpret)
+    # named for selective remat (models.families.REMAT_SAVE_NAMES): saving
+    # (out, lse) lets jax.checkpoint keep exactly the backward's residuals
+    # instead of re-running the forward kernel
+    o = checkpoint_name(o, "flash_out")
+    lse = checkpoint_name(lse, "flash_lse")
     return o, (q, k, v, o, lse)
 
 

@@ -38,6 +38,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -140,6 +141,8 @@ def _gemm(x, w, gs, block_c, block_f, block_d, interpret):
 
 def _gemm_fwd(x, w, gs, block_c, block_f, block_d, interpret):
     out = _gemm(x, w, gs, block_c, block_f, block_d, interpret)
+    # named for selective remat (models.families.REMAT_SAVE_NAMES)
+    out = checkpoint_name(out, "expert_gemm_out")
     return out, (x, w, gs)
 
 

@@ -51,6 +51,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -331,6 +332,11 @@ def _ssd(x, dt, A, Bm, Cm, chunk, interpret):
 def _ssd_fwd(x, dt, A, Bm, Cm, chunk, interpret):
     y, enters, state = _ssd_forward(x, dt, A, Bm, Cm, chunk, interpret,
                                     save_enters=True)
+    # named for selective remat (models.families.REMAT_SAVE_NAMES): the
+    # per-chunk entering states are the only activation-sized residual the
+    # fused backward consumes
+    y = checkpoint_name(y, "ssd_out")
+    enters = checkpoint_name(enters, "ssd_state")
     return (y, state), (x, dt, A, Bm, Cm, enters)
 
 

@@ -14,7 +14,7 @@ import jax               # noqa: E402
 from repro.core import ARCH_IDS, INPUT_SHAPES, ParallelPlan, SHAPES_BY_NAME  # noqa: E402
 from repro.core.config import Family  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.stepbuilder import build_step, resolve_config, skip_reason  # noqa: E402
+from repro.launch.stepbuilder import build_step, jit_step, resolve_config, skip_reason  # noqa: E402
 from repro.perf import Roofline, model_flops_for  # noqa: E402
 from repro.perf.hlo_cost import analyze_hlo  # noqa: E402
 
@@ -90,7 +90,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, plan: ParallelPlan,
     fn, args, shardings, meta = build_step(arch, shape_name, mesh, plan)
 
     with mesh:
-        jitted = jax.jit(fn, in_shardings=shardings)
+        jitted = jit_step(fn, shardings, meta)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -40,6 +40,13 @@ def _ns(mesh, tree_specs):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def jit_step(fn, in_shardings, meta):
+    """jit a build_step result with its input shardings and buffer donation
+    (train steps donate the TrainState so params/moments alias in place)."""
+    return jax.jit(fn, in_shardings=in_shardings,
+                   donate_argnums=meta.get("donate_argnums", ()))
+
+
 def build_step(arch: str, shape_name: str, mesh: Mesh, plan: ParallelPlan,
                smoke: bool = False):
     """Returns (fn, args_sds tuple, in_shardings tuple, meta dict).
@@ -68,7 +75,7 @@ def build_step(arch: str, shape_name: str, mesh: Mesh, plan: ParallelPlan,
 
     if shape.kind == "train":
         hyper = Hyper()
-        step = make_train_step(model, plan, hyper)
+        step = make_train_step(model, plan, hyper, mesh=mesh)
         state_sds = jax.eval_shape(
             lambda r: TrainState(model.init(r), adamw_init(model.init(r))), rng)
         ospecs = sharding.opt_state_specs(pspecs, params_sds, plan, mesh)
@@ -80,6 +87,9 @@ def build_step(arch: str, shape_name: str, mesh: Mesh, plan: ParallelPlan,
         batch_shard = {k: NamedSharding(mesh, P(baxes if baxes else None,
                                                 *([None] * (len(v.shape) - 1))))
                        for k, v in batch_sds.items()}
+        # donate the TrainState: params + fp32 moments update in place under
+        # jit instead of doubling peak memory for the step's duration
+        meta["donate_argnums"] = (0,)
         return step, (state_sds, batch_sds), (state_shard, batch_shard), meta
 
     if shape.kind == "prefill":

@@ -67,7 +67,8 @@ def main() -> None:
     print(f"[train] arch={cfg.arch_id} params={n_params/1e6:.1f}M "
           f"devices={n_dev} batch={args.batch} seq={args.seq}")
 
-    step_fn = jax.jit(make_train_step(model, plan, hyper), donate_argnums=(0,))
+    step_fn = jax.jit(make_train_step(model, plan, hyper, mesh=mesh),
+                      donate_argnums=(0,))
     ds = SyntheticDataset(cfg, shape)
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     monitor = Monitor()

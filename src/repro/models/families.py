@@ -57,11 +57,30 @@ def _stacked_init(rng, n: int, fn: Callable[[jax.Array], Any]) -> Any:
     return jax.vmap(fn)(jax.random.split(rng, n))
 
 
+# Selective-remat save set (survey §6.1): the fused-kernel outputs and the
+# residuals their custom VJPs consume — flash-attention out + per-row
+# logsumexp, the grouped expert-GEMM output, the SSD per-chunk entering
+# states — plus the glue-level block outputs the XLA twins tag. Everything
+# else (norms, projections, rotary, SwiGLU glue) is cheap to recompute.
+REMAT_SAVE_NAMES: Tuple[str, ...] = (
+    "flash_out", "flash_lse",        # kernels/flash_attention.py fwd residuals
+    "expert_gemm_out",               # kernels/grouped_gemm.py fwd output
+    "ssd_out", "ssd_state",          # kernels/ssd_scan.py output + chunk states
+    "attn_out", "block_out",         # glue-level tags (XLA twin paths)
+)
+
+
 def _remat(f, mode: str):
+    """Per-decoder-layer activation recomputation (``plan.remat``).
+
+    ``none`` differentiates normally (every intermediate saved), ``full``
+    recomputes the whole layer in the backward, ``selective`` saves only
+    :data:`REMAT_SAVE_NAMES` and recomputes the cheap glue around the kernels.
+    """
     if mode == "none":
         return f
     if mode == "selective":
-        pol = jax.checkpoint_policies.save_only_these_names("attn_out", "block_out")
+        pol = jax.checkpoint_policies.save_only_these_names(*REMAT_SAVE_NAMES)
         return jax.checkpoint(f, policy=pol)
     return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
 

@@ -1,8 +1,10 @@
-from .adamw import AdamWState, adamw_init, adamw_update
+from .adamw import (AdamWState, adamw_init, adamw_update,
+                    adamw_update_sharded, constrain_tree)
 from .schedule import cosine_schedule, linear_warmup
 from .clip import clip_by_global_norm
 
 __all__ = [
-    "AdamWState", "adamw_init", "adamw_update",
+    "AdamWState", "adamw_init", "adamw_update", "adamw_update_sharded",
+    "constrain_tree",
     "cosine_schedule", "linear_warmup", "clip_by_global_norm",
 ]

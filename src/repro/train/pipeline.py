@@ -1,18 +1,40 @@
 """Pipeline parallelism over the ``pod`` axis (survey §4.1.3).
 
-SPMD formulation (the JAX-native equivalent of MPMD GPipe — DESIGN.md §2):
-inside a ``shard_map`` over ``pod``, every pod executes the same program; pod
-``i`` holds layers [i·L/P, (i+1)·L/P) (the layer-stacked params are sharded on
-their leading dim), and activations rotate stage-to-stage with
-``ppermute``. The schedule is GPipe fill-drain: with M microbatches and P
-stages the loop runs M+P-1 ticks, bubble fraction (P-1)/(M+P-1). Reverse-mode
-AD differentiates straight through the ``ppermute``s, generating the mirrored
-backward pipeline automatically.
+SPMD formulation (the JAX-native equivalent of MPMD pipeline schedules —
+DESIGN.md §2): inside a ``shard_map`` over ``pod``, every pod executes the same
+program; pod ``i`` holds layers [i·L/P, (i+1)·L/P) (the layer-stacked params
+are sharded on their leading dim), and activations rotate stage-to-stage with
+``ppermute``. Embedding runs on every pod (cheap, replicated weights) but only
+stage 0's output enters the pipeline; the LM head + loss run on the last stage
+(behind a ``lax.cond`` so the other stages skip the dead logits/xent compute)
+and the scalar loss is broadcast back with a ``psum`` mask.
 
-Embedding runs on every pod (cheap, replicated weights) but only stage 0's
-output enters the pipeline; the LM head + loss run on the last stage and the
-scalar loss is broadcast back with a ``psum`` mask — standard SPMD-pipeline
-bookkeeping.
+Two schedules, selected by ``plan.pp_schedule``:
+
+- ``"gpipe"`` — fill-drain: the forward scan runs M+P-1 ticks and reverse-mode
+  AD differentiates straight through the ``ppermute``s, generating the mirrored
+  backward pipeline automatically. Simple, but the autodiff keeps every tick's
+  stage activations live between the forward and backward scans: peak in-flight
+  activation memory is O(M) microbatches.
+
+- ``"1f1b"`` (default) — one-forward-one-backward: the loss is a
+  ``jax.custom_vjp`` whose forward saves nothing but (params, batch), and whose
+  backward runs ONE scan in which every tick advances the forward pipeline by
+  one stage-tick (recompute) AND retires one backward stage-tick for the
+  microbatch that just drained — the mirrored drain interleaved with forward
+  ticks. Stage inputs wait in a ring buffer of 2P-1 slots between their
+  recompute tick and their backward tick, so peak in-flight activations drop
+  from O(M) microbatches to O(P) stages. Loss and gradients are bit-compatible
+  with GPipe (same per-microbatch math, same f32 accumulation order up to
+  reassociation).
+
+Backward schedule bookkeeping (P stages, M microbatches, tick t):
+the forward recompute of microbatch ``m`` reaches stage ``p`` at tick
+``m + p``; its backward runs at stage ``p`` at tick ``m + 2(P-1) - p``
+(the cotangent enters at the last stage the tick its recompute finishes and
+``ppermute``s backward one stage per tick). A stage therefore holds a saved
+stage input for at most ``2(P-1)`` ticks — the ring of ``2P-1`` slots is
+exactly enough, and the scan runs ``M + 2(P-1)`` ticks total.
 
 Supported for decoder-only families (dense / vlm backbones); the hybrid/
 enc-dec/MoE archs pipeline equally in principle but are out of scope for this
@@ -26,120 +48,235 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.core.config import ModelConfig, ParallelPlan
-from repro.models.families import _decoder_layer_fwd, _embed, _layer_windows, _logits
+from repro.models.families import (_decoder_layer_fwd, _embed, _layer_windows,
+                                   _logits, _remat)
 from repro.models.layers import rms_norm
 from repro.train.loss import cross_entropy
 
 
+def _names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
 def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
-                      batch_axes: Tuple[str, ...] = ("data",)):
+                      batch_axes: Tuple[str, ...] = ("data",),
+                      z_loss: float = 0.0):
     """Returns loss_fn(params, batch) with layers pipelined over ``pod``.
 
     Requires: mesh has a ``pod`` axis, plan.pp == mesh.shape["pod"],
-    plan.microbatches >= plan.pp, cfg.n_layers % pp == 0.
+    plan.microbatches >= plan.pp, cfg.n_layers % pp == 0. ``z_loss`` is
+    threaded into the per-microbatch cross-entropy so pipelined and
+    single-stage losses agree bit-for-bit.
     """
     pp = mesh.shape["pod"]
     assert plan.pp == pp and cfg.n_layers % pp == 0
     n_micro = plan.microbatches
     assert n_micro >= pp, "need microbatches >= stages for pipelining"
+    schedule = plan.pp_schedule
     layers_per_stage = cfg.n_layers // pp
     dtype = jnp.dtype(plan.compute_dtype)
     windows_all = jnp.asarray(_layer_windows(cfg))
     layer_fwd = _decoder_layer_fwd(cfg, dtype, None, plan, batch_axes)
     baxes = batch_axes if batch_axes else None
+    n_dp = 1
+    for a in (batch_axes or ()):
+        n_dp *= mesh.shape[a]
+    perm_fwd = [(i, (i + 1) % pp) for i in range(pp)]
+    perm_bwd = [(i, (i - 1) % pp) for i in range(pp)]
 
     # param specs: layer stack sharded over pod on dim 0; the rest replicated
     # over pod (embed/lm_head/final_norm are small relative to the stack).
     def param_specs(params):
         def one(path, leaf):
-            names = [str(getattr(p, "key", getattr(p, "name", p)))
-                     for p in path]
-            if "layers" in names:
-                return P("pod")
-            return P()
+            return P("pod") if "layers" in _names(path) else P()
         return jax.tree_util.tree_map_with_path(one, params)
+
+    def _tick_factory(toks_mb, labs_mb, windows_l, positions):
+        """Build tick(params_local, buf, t) -> (x_out, loss_c, aux_c) — one
+        pipeline tick of one stage. ``loss_c``/``aux_c`` are (1,)-shaped
+        (scalar scan carries break grad-of-shard_map on jax 0.4.x)."""
+        stage = jax.lax.axis_index("pod")
+
+        def tick(params_local, buf, t):
+            # stage 0 ingests a fresh microbatch while filling
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            fresh = _embed(params_local, toks_mb[mb_idx], cfg, dtype)
+            x = jnp.where((stage == 0) & (t < n_micro), fresh, buf)
+
+            def body(carry, xs):
+                xc, aux = carry
+                lp, w = xs
+                xn, a = layer_fwd(xc, lp, w, positions)
+                return (xn, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                _remat(body, plan.remat),
+                (x, jnp.zeros((1,), jnp.float32)),
+                (params_local["layers"], windows_l[0]))
+
+            # LM head + loss only on the last stage, and only once the
+            # microbatch that entered at t - (P-1) has drained — lax.cond
+            # skips the dead logits/xent compute everywhere else
+            out_idx = jnp.clip(t - (pp - 1), 0, n_micro - 1)
+            take = (stage == pp - 1) & (t >= pp - 1)
+
+            def head(xh):
+                h = rms_norm(xh, params_local["final_norm"]["scale"],
+                             cfg.rms_eps)
+                logits = _logits(params_local, h, cfg, dtype)
+                return cross_entropy(logits, labs_mb[out_idx], z_loss=z_loss)
+
+            mb_loss = jax.lax.cond(take, head, lambda xh: jnp.float32(0.0), x)
+            return x, mb_loss[None], jnp.where(take, aux, 0.0)
+
+        return tick
+
+    def _microbatches(tokens_l, labels_l):
+        bl, s = tokens_l.shape
+        assert bl % n_micro == 0, (bl, n_micro)
+        mb = bl // n_micro
+        return (tokens_l.reshape(n_micro, mb, s),
+                labels_l.reshape(n_micro, mb, s), mb, s)
+
+    def _staged_fwd(params_local, tokens_l, labels_l, windows_l):
+        """Fill-drain forward pipeline (shared by both schedules). Returns the
+        replicated (2,) vector [xent, moe_aux]."""
+        toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
+        tick = _tick_factory(toks_mb, labs_mb, windows_l, jnp.arange(s))
+
+        def fwd_tick(carry, t):
+            buf, loss_sum, aux_sum = carry
+            x, lc, ac = tick(params_local, buf, t)
+            buf = jax.lax.ppermute(x, "pod", perm_fwd)
+            return (buf, loss_sum + lc, aux_sum + ac), None
+
+        buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
+        zero = jnp.zeros((1,), jnp.float32)
+        (_, loss_sum, aux_sum), _ = jax.lax.scan(
+            fwd_tick, (buf0, zero, zero), jnp.arange(n_micro + pp - 1))
+        # broadcast the last stage's mean loss to all pods, then average
+        # over the data-parallel shards
+        loss = jax.lax.psum(loss_sum[0], "pod") / n_micro
+        aux = jax.lax.psum(aux_sum[0], "pod") / n_micro
+        if batch_axes:
+            loss = jax.lax.pmean(loss, batch_axes)
+            aux = jax.lax.pmean(aux, batch_axes)
+        return jnp.stack([loss, aux])
+
+    def _staged_bwd(params_local, tokens_l, labels_l, windows_l, g):
+        """1F1B backward: one scan whose tick t (a) advances the forward
+        recompute pipeline by one stage-tick and (b) retires the backward
+        stage-tick for the microbatch this stage owes at t. Saved stage inputs
+        wait in a 2P-1 ring between (a) and (b); peak in-flight activations
+        are O(P), never O(M)."""
+        stage = jax.lax.axis_index("pod")
+        toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
+        tick = _tick_factory(toks_mb, labs_mb, windows_l, jnp.arange(s))
+
+        ring = 2 * pp - 1
+        n_ticks = n_micro + 2 * (pp - 1)
+        # loss = pmean_data(psum_pod(Σ_m mb_loss) / M): each microbatch loss
+        # carries weight 1/(M · n_dp) toward the global scalar
+        w_loss = g[0] / (n_micro * n_dp)
+        w_aux = g[1] / (n_micro * n_dp)
+
+        def btick(carry, t):
+            fbuf, xring, dbuf, gacc = carry
+
+            # (a) forward recompute: stash this tick's stage input, advance
+            # the pipe one stage-tick (idle once every microbatch has drained)
+            xring = jax.lax.dynamic_update_index_in_dim(
+                xring, fbuf, jnp.mod(t, ring), axis=0)
+            x_out = jax.lax.cond(
+                t < n_micro + pp - 1,
+                lambda b: tick(params_local, b, t)[0], lambda b: b, fbuf)
+            fbuf_next = jax.lax.ppermute(x_out, "pod", perm_fwd)
+
+            # (b) backward: stage p owes microbatch m = t - 2(P-1) + p, whose
+            # stage input was stashed at forward tick t_f = m + p
+            m = t - 2 * (pp - 1) + stage
+            valid = (m >= 0) & (m < n_micro)
+            t_f = m + stage
+            x_in = jax.lax.dynamic_index_in_dim(
+                xring, jnp.mod(t_f, ring), axis=0, keepdims=False)
+            _, vjp_fn = jax.vjp(
+                lambda p, b: tick(p, b, t_f), params_local, x_in)
+            mask = jnp.where(valid, 1.0, 0.0)
+            seeds = (jnp.where(valid, dbuf, 0).astype(dbuf.dtype),
+                     (w_loss * mask)[None], (w_aux * mask)[None])
+            dp, dx_in = vjp_fn(seeds)
+            gacc = jax.tree.map(jnp.add, gacc, dp)
+            # the input cotangent belongs to the previous stage's output —
+            # rotate it backward one stage (stage 0 emits zeros: its input is
+            # the embedding, so the wrap-around to stage P-1 carries nothing)
+            dbuf_next = jax.lax.ppermute(dx_in, "pod", perm_bwd)
+            return (fbuf_next, xring, dbuf_next, gacc), None
+
+        buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
+        gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params_local)
+        init = (buf0, jnp.zeros((ring,) + buf0.shape, dtype),
+                jnp.zeros_like(buf0), gacc0)
+        (_, _, _, gacc), _ = jax.lax.scan(btick, init, jnp.arange(n_ticks))
+
+        # the 1/(M·n_dp) weight is already in the seeds, so grads just sum
+        # across DP shards; embed/head/final_norm live on every pod but only
+        # one stage produced their cotangent — psum over pod completes them
+        def finish(path, g_leaf):
+            if batch_axes:
+                g_leaf = jax.lax.psum(g_leaf, batch_axes)
+            if "layers" not in _names(path):
+                g_leaf = jax.lax.psum(g_leaf, "pod")
+            return g_leaf
+
+        return jax.tree_util.tree_map_with_path(finish, gacc)
+
+    def _run_fwd(params, tokens, labels):
+        windows = windows_all.reshape(pp, layers_per_stage)
+        return shard_map(
+            _staged_fwd, mesh=mesh,
+            in_specs=(param_specs(params),
+                      P(baxes, None), P(baxes, None), P("pod", None)),
+            out_specs=P(),
+        )(params, tokens, labels, windows)
+
+    @jax.custom_vjp
+    def f1b(params, tokens, labels):
+        return _run_fwd(params, tokens, labels)
+
+    def f1b_fwd(params, tokens, labels):
+        # residuals are just (params, batch): unlike reverse-AD through the
+        # forward scan, no per-tick activations survive the forward pass
+        return f1b(params, tokens, labels), (params, tokens, labels)
+
+    def f1b_bwd(res, g):
+        params, tokens, labels = res
+        pspecs = param_specs(params)
+        windows = windows_all.reshape(pp, layers_per_stage)
+        grads = shard_map(
+            _staged_bwd, mesh=mesh,
+            in_specs=(pspecs, P(baxes, None), P(baxes, None),
+                      P("pod", None), P()),
+            out_specs=pspecs,
+        )(params, tokens, labels, windows, g)
+        zt = np.zeros(tokens.shape, dtype=jax.dtypes.float0)
+        zl = np.zeros(labels.shape, dtype=jax.dtypes.float0)
+        return grads, zt, zl
+
+    f1b.defvjp(f1b_fwd, f1b_bwd)
 
     def loss_fn(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
-        b, s = tokens.shape
-
-        pspecs = param_specs(params)
-        windows = windows_all.reshape(pp, layers_per_stage)
-
-        def staged(params_local, tokens_l, labels_l, windows_l):
-            stage = jax.lax.axis_index("pod")
-            positions = jnp.arange(s)
-
-            # microbatch queue over the LOCAL (data-sharded) batch;
-            # stage 0 feeds the pipe
-            bl = tokens_l.shape[0]
-            assert bl % n_micro == 0, (bl, n_micro)
-            mb = bl // n_micro
-            toks_mb = tokens_l.reshape(n_micro, mb, s)
-            labs_mb = labels_l.reshape(n_micro, mb, s)
-
-            # scalar scan carries break grad-of-shard_map on jax 0.4.x (the
-            # linearization's scalar residuals can't be spec'd per-device) —
-            # every accumulator below is carried as shape (1,) instead
-            def stage_fn(x):
-                def body(carry, xs):
-                    xc, aux = carry
-                    lp, w = xs
-                    xn, a = layer_fwd(xc, lp, w, positions)
-                    return (xn, aux + a), None
-                (x, aux), _ = jax.lax.scan(
-                    body, (x, jnp.zeros((1,), jnp.float32)),
-                    (params_local["layers"], windows_l[0]))
-                return x, aux
-
-            def tick(carry, t):
-                buf, loss_sum, aux_sum, tok_count = carry
-                # stage 0 ingests microbatch t (if still filling)
-                mb_idx = jnp.clip(t, 0, n_micro - 1)
-                fresh = _embed(params_local, toks_mb[mb_idx], cfg, dtype)
-                x = jnp.where((stage == 0) & (t < n_micro), fresh, buf)
-                x, aux = stage_fn(x)
-                # last stage computes loss for the microbatch that entered at
-                # t - (pp - 1)
-                out_idx = jnp.clip(t - (pp - 1), 0, n_micro - 1)
-                h = rms_norm(x, params_local["final_norm"]["scale"], cfg.rms_eps)
-                logits = _logits(params_local, h, cfg, dtype)
-                mb_loss = cross_entropy(logits, labs_mb[out_idx])
-                take = (stage == pp - 1) & (t >= pp - 1)
-                loss_sum = loss_sum + jnp.where(take, mb_loss, 0.0)
-                aux_sum = aux_sum + jnp.where(take, aux, 0.0)
-                tok_count = tok_count + jnp.where(take, 1.0, 0.0)
-                # rotate activations forward one stage
-                perm = [(i, (i + 1) % pp) for i in range(pp)]
-                buf = jax.lax.ppermute(x, "pod", perm)
-                return (buf, loss_sum, aux_sum, tok_count), None
-
-            buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
-            zero = jnp.zeros((1,), jnp.float32)
-            init = (buf0, zero, zero, zero)
-            (buf, loss_sum, aux_sum, cnt), _ = jax.lax.scan(
-                tick, init, jnp.arange(n_micro + pp - 1))
-            # broadcast the last stage's mean loss to all pods, then average
-            # over the data-parallel shards
-            loss = jax.lax.psum(loss_sum[0], "pod") / n_micro
-            aux = jax.lax.psum(aux_sum[0], "pod") / n_micro
-            if batch_axes:
-                loss = jax.lax.pmean(loss, batch_axes)
-                aux = jax.lax.pmean(aux, batch_axes)
-            return loss, aux
-
-        in_specs = (pspecs,
-                    P(baxes, None), P(baxes, None),
-                    P("pod", None))
-        loss, aux = shard_map(
-            staged, mesh=mesh,
-            in_specs=in_specs,
-            out_specs=(P(), P()),
-        )(params, tokens, labels, windows)
+        if schedule == "1f1b":
+            v = f1b(params, tokens, labels)
+        else:
+            v = _run_fwd(params, tokens, labels)
+        loss, aux = v[0], v[1]
         return loss + aux, {"xent": loss, "moe_aux": aux}
 
     return loss_fn

@@ -8,6 +8,15 @@ The returned function is pure and jit/pjit-friendly:
 Gradient accumulation (``plan.microbatches``) runs as a ``lax.scan`` over
 microbatch slices — constant HLO size, and under pipeline parallelism the same
 slicing provides the pipeline's microbatches.
+
+ZeRO-1 (survey §6.2.1): pass ``mesh`` and the step shards the optimizer work
+over the ``data`` axis. The fp32 microbatch accumulator is *born scattered*
+(constrained to ``core.sharding.opt_state_specs``), so each microbatch's grads
+reduce-scatter straight into the shard and a fully-replicated fp32 grad copy
+never exists; the AdamW math then runs on each device's slice of the moments
+(``optim.adamw_update_sharded``) and only the updated params all-gather back.
+Without ``mesh`` (or with ``plan.zero_stage == 0``) the step is the plain
+replicated update — same math either way.
 """
 
 from __future__ import annotations
@@ -16,10 +25,13 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
+from repro.core import sharding as shardlib
 from repro.core.config import ModelConfig, ParallelPlan
 from repro.models.families import Model
-from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+from repro.optim import (adamw_init, adamw_update, adamw_update_sharded,
+                         clip_by_global_norm, constrain_tree, cosine_schedule)
 from .loss import cross_entropy
 
 
@@ -59,13 +71,23 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
 
 
 def make_train_step(model: Model, plan: ParallelPlan,
-                    hyper: Hyper = Hyper()) -> Callable:
+                    hyper: Hyper = Hyper(),
+                    mesh: Optional[Mesh] = None) -> Callable:
     loss_fn = make_loss_fn(model, hyper)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    use_zero = (mesh is not None and plan.zero_stage >= 1
+                and "data" in mesh.shape and mesh.shape["data"] > 1)
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]
                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
         params, opt = state
+
+        if use_zero:
+            pspecs = shardlib.param_specs(params, model.cfg, plan, mesh)
+            ospecs = shardlib.opt_state_specs(pspecs, params, plan, mesh)
+            scatter = lambda tree: constrain_tree(tree, ospecs, mesh)
+        else:
+            scatter = lambda tree: tree
 
         if plan.microbatches > 1:
             mb = _split_microbatches(batch, plan.microbatches)
@@ -73,10 +95,15 @@ def make_train_step(model: Model, plan: ParallelPlan,
             def acc(carry, mbatch):
                 g_acc, l_acc, a_acc = carry
                 (loss, aux), grads = grad_fn(params, mbatch)
-                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                # accumulate into the scattered shard: under ZeRO-1 each
+                # microbatch's grads reduce-scatter here instead of
+                # all-reducing into a replicated fp32 copy (g_acc's layout is
+                # already pinned by the scattered g0 carry)
+                g_acc = jax.tree.map(jnp.add, g_acc, scatter(grads))
                 return (g_acc, l_acc + loss, a_acc + aux["moe_aux"]), None
 
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g0 = scatter(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
             (grads, loss, aux_sum), _ = jax.lax.scan(
                 acc, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb)
             grads = jax.tree.map(lambda g: g / plan.microbatches, grads)
@@ -84,12 +111,18 @@ def make_train_step(model: Model, plan: ParallelPlan,
             aux = {"moe_aux": aux_sum / plan.microbatches}
         else:
             (loss, aux), grads = grad_fn(params, batch)
+            grads = scatter(grads)
 
         grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         lr = cosine_schedule(opt.step, hyper.peak_lr, hyper.warmup_steps,
                              hyper.total_steps)
-        new_params, new_opt = adamw_update(
-            grads, opt, params, lr, weight_decay=hyper.weight_decay)
+        if use_zero:
+            new_params, new_opt = adamw_update_sharded(
+                grads, opt, params, lr, mesh=mesh, param_specs=pspecs,
+                opt_specs=ospecs, weight_decay=hyper.weight_decay)
+        else:
+            new_params, new_opt = adamw_update(
+                grads, opt, params, lr, weight_decay=hyper.weight_decay)
         metrics = {
             "loss": loss,
             "grad_norm": gnorm,

@@ -149,8 +149,10 @@ params = model.init(jax.random.PRNGKey(0))
 ref_loss, _ = make_loss_fn(model, hyper)(params, batch)
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+# pin the gpipe schedule: this test covers reverse-AD through the forward
+# scan; tests/test_train_memory.py covers 1f1b (and both against gpipe)
 plan = ParallelPlan(remat="none", compute_dtype="float32", pp=2,
-                    microbatches=4)
+                    microbatches=4, pp_schedule="gpipe")
 pipe_loss_fn = pipelined_loss_fn(cfg, plan, mesh, ("data",))
 pipe_loss, _ = jax.jit(pipe_loss_fn)(params, batch)
 print("ref", float(ref_loss[0] if isinstance(ref_loss, tuple) else ref_loss),
