@@ -4,7 +4,11 @@ Builds the (pod=2, data=2, model=2) mesh, pipelines a 4-layer dense model as
 2 stages over the ``pod`` axis under both schedules — GPipe fill-drain and the
 memory-lean 1F1B custom-VJP schedule (``plan.pp_schedule``) — verifies both
 against the non-pipelined loss, compares their compiled peak live memory, and
-trains with the 1F1B schedule.
+trains with the 1F1B schedule. Finally composes TP x PP (survey §4.1.2 x
+§4.1.3): ``plan.tp_impl = "overlap"`` runs the collective-matmul ring steps of
+``train/tensor_parallel.py`` *inside* each 1F1B tick, with sequence-sharded
+(mb, s/tp, d) activations rotating between stages and a vocab-parallel loss
+on the last stage.
 
     PYTHONPATH=src python examples/pipeline_multipod.py
 """
@@ -31,8 +35,11 @@ def main():
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = ModelConfig("pipe-demo", Family.DENSE, n_layers=4, d_model=128,
                       n_heads=4, n_kv_heads=2, d_ff=256, vocab=512)
+    # tp_impl pinned so the baseline stays the GSPMD pipeline even on TPU
+    # backends (where "auto" resolves to overlap) — the TP x PP section below
+    # flips it explicitly and compares against this
     plan = ParallelPlan(remat="none", compute_dtype="float32", pp=2,
-                        microbatches=4)
+                        microbatches=4, tp_impl="gspmd")
     shape = InputShape("pipe", seq_len=64, global_batch=8, kind="train")
     ds = SyntheticDataset(cfg, shape)
 
@@ -74,6 +81,19 @@ def main():
         if i % 3 == 0:
             print(f"pipelined step {i}: loss {float(loss):.4f}")
     print("multi-pod pipeline training OK")
+
+    # TP x PP: the same 1F1B pipeline with overlap tensor parallelism on the
+    # model axis — ring-decomposed collective matmuls inside each stage tick,
+    # (mb, s/tp, d) sequence shards on the stage-to-stage ppermute, and the
+    # vocab-parallel cross-entropy on the last stage. Same loss, tp x smaller
+    # inter-stage transfers and between-block activations.
+    tp_plan = dataclasses.replace(plan, tp=2, tp_impl="overlap")
+    tp_loss_fn = pipelined_loss_fn(cfg, tp_plan, mesh, ("data",))
+    tp_loss, _ = jax.jit(tp_loss_fn)(params, batch)
+    base_loss, _ = jax.jit(pipe_loss_fn)(params, batch)
+    assert abs(float(tp_loss) - float(base_loss)) < 2e-5
+    print(f"TP x PP (1f1b + overlap rings) loss {float(tp_loss):.6f} == "
+          f"pp-only loss {float(base_loss):.6f}")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,20 @@
 # Tier-1 verification — the one entry point for CI and fresh clones.
 # Mirrors ROADMAP.md: PYTHONPATH=src python -m pytest -x -q
 # then smokes every fused Pallas kernel fwd+bwd under pallas_call (interpret
-# mode, one shape per op) plus a selective-remat train step, and records the
-# remat-policy peak-memory/step-time trade-off to BENCH_trainstep.json.
+# mode, one shape per op), the overlap-TP ring path vs gspmd on a 2-way model
+# mesh (quick.tp.overlap), and a selective-remat train step; records the
+# remat-policy peak-memory/step-time trade-off to BENCH_trainstep.json and the
+# gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json
+# (run.py prints a one-line delta vs the previous JSON so the perf trajectory
+# is visible in CI logs).
+#
+# `-o pipefail` matters: the benchmark steps are tee'd into logs, and without
+# it a crashing benchmark smoke would exit 0 through the pipe and pass
+# silently.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
-python -m benchmarks.run --quick
-python -m benchmarks.run --only trainstep --json BENCH_trainstep.json
+python -m benchmarks.run --quick | tee bench_quick.log
+python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee bench_trainstep.log
+python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log

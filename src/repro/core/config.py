@@ -176,6 +176,23 @@ class ParallelPlan:
     ``pod`` = DP (default) or pipeline stages.
     """
     tp: int = 1                    # tensor-parallel degree (model axis)
+    tp_impl: str = "auto"          # "auto" | "gspmd" | "overlap": how model-axis
+                                   # tensor parallelism executes (survey §4.1.2,
+                                   # §5.2). "gspmd" annotates layouts and lets
+                                   # XLA insert the (blocking) all-reduce after
+                                   # every row GEMM. "overlap" is the explicit
+                                   # shard_map path (train/tensor_parallel.py):
+                                   # collective matmuls decompose the column
+                                   # GEMM's all-gather and the row GEMM's
+                                   # reduce-scatter into ppermute ring steps
+                                   # interleaved with partial GEMM tiles, and
+                                   # activations stay sequence-sharded
+                                   # (batch, seq/tp) between blocks (Megatron-
+                                   # SP). "auto" resolves per backend in
+                                   # repro.kernels.dispatch.select_tp_impl:
+                                   # overlap on TPU (where the async ppermutes
+                                   # actually hide the transfer), gspmd
+                                   # elsewhere.
     dp_shard: int = 1              # param sharding factor F over data axis (§4.1.1)
     zero_stage: int = 1            # 0: replicated opt state, 1: shard over data axis
     ep: bool = False               # expert parallelism (all-to-all) for MoE layers
@@ -207,7 +224,13 @@ class ParallelPlan:
                                    # divides the model axis (Megatron-style):
                                    # keeps logits vocab-parallel instead of
                                    # all-reducing a (B,S,V) tensor per step.
-                                   # Padded logits are masked to -1e9.
+                                   # Padded logits are masked to -1e9. Under
+                                   # tp_impl="overlap" the vocab-parallel
+                                   # cross-entropy (train/loss.py
+                                   # cross_entropy_vp) completes this: the
+                                   # softmax reduces per shard + scalar psum,
+                                   # so the full-vocab logits tensor never
+                                   # exists.
     dp_over_model: bool = False    # beyond-paper mesh remap: run the model
                                    # axis as extra data parallelism (256-way
                                    # DP). Right for small models where 1-D TP
@@ -242,6 +265,9 @@ class ParallelPlan:
             if getattr(self, knob) not in ("auto", "xla", "pallas"):
                 raise ValueError(
                     f"{knob} must be auto|xla|pallas, got {getattr(self, knob)!r}")
+        if self.tp_impl not in ("auto", "gspmd", "overlap"):
+            raise ValueError(
+                f"tp_impl must be auto|gspmd|overlap, got {self.tp_impl!r}")
         if self.remat not in ("none", "selective", "full"):
             raise ValueError(
                 f"remat must be none|selective|full, got {self.remat!r}")

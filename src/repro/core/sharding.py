@@ -17,6 +17,23 @@ implement the survey's hybrid-parallelism taxonomy:
 All rules check divisibility: GSPMD would pad uneven shards, but padded layouts
 waste FLOPs and skew the roofline, so non-divisible dims stay replicated and the
 hillclimb loop (§Perf) reconsiders them explicitly.
+
+Two tensor-parallel execution modes consume these rules
+(``ParallelPlan.tp_impl``):
+
+- ``"gspmd"`` (annotation-only): :func:`param_specs` layouts + a handful of
+  activation constraints; XLA's partitioner inserts a blocking all-reduce
+  after every row GEMM and keeps (B, S, d) activations replicated between
+  blocks.
+- ``"overlap"`` (``train/tensor_parallel.py``): the same column/row/vocab
+  classification feeds :func:`overlap_param_specs`, the in_specs of an
+  explicit ``shard_map``. There the all-gather/reduce-scatter pair of each
+  column/row GEMM is decomposed into ``ppermute`` ring steps interleaved with
+  partial GEMM tiles, and activations stay **sequence-sharded**
+  ``(batch, seq/tp, d)`` between blocks (Megatron-SP, survey §4.1.4) — see
+  :func:`seq_activation_spec`. RMSNorm, residual adds and the embedding
+  lookup run on sequence shards; the full sequence is only re-materialized
+  inside a block, fused into the first GEMM's ring ticks.
 """
 
 from __future__ import annotations
@@ -176,6 +193,51 @@ def param_shardings(params: Any, cfg: ModelConfig, plan: ParallelPlan, mesh: Mes
 
 
 # ---------------------------------------------------------------------------
+# Overlap-TP (shard_map ring path) parameter specs
+
+
+def overlap_spec_for_param(path_names: Tuple[str, ...],
+                           shape: Tuple[int, ...], cfg: ModelConfig) -> P:
+    """Spec for one leaf entering the overlap-TP ``shard_map``.
+
+    Same column/row/vocab classification as :func:`spec_for_param`, but:
+
+    - always ``model``-sharded on the classified dim (the ring path validates
+      divisibility up front — ``tensor_parallel.check_overlap_support`` —
+      instead of silently replicating);
+    - never FSDP-annotated (params enter the shard_map replicated over
+      ``data``; ZeRO handles optimizer sharding outside the loss);
+    - the embedding is always vocab-sharded: the ring path does the Megatron
+      masked-lookup + psum, so no hidden-dim fallback exists;
+    - small SSM per-head/per-channel leaves (A_log, D, dt_bias, conv_*,
+      scale) stay replicated — ``ssm_block_tp`` slices each rank's
+      head/channel chunk explicitly.
+    """
+    name = path_names[-1]
+    spec: list = [None] * len(shape)
+    if name == "tok" or (name == "w" and "lm_head" in path_names):
+        spec[0 if name == "tok" else 1] = "model"
+    elif "experts" in path_names and name in ("gate", "up"):
+        spec[-1] = "model"                      # (L?, E, d, de): shard d_expert
+    elif "experts" in path_names and name == "down":
+        spec[-2] = "model"
+    elif name in _COL_KEYS:
+        spec[-1] = "model"
+    elif name in _ROW_KEYS:
+        spec[-2] = "model"
+    return P(*spec)
+
+
+def overlap_param_specs(params: Any, cfg: ModelConfig, plan: ParallelPlan,
+                        mesh: Mesh) -> Any:
+    """PartitionSpec pytree for ``shard_map`` in_specs on the overlap-TP path."""
+    del plan, mesh  # classification is static; callers validated divisibility
+    def one(path, leaf):
+        return overlap_spec_for_param(_path_names(path), tuple(leaf.shape), cfg)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
 # Activation / batch specs
 
 
@@ -196,6 +258,12 @@ def data_spec(mesh: Mesh, plan: ParallelPlan, ndim: int = 2) -> P:
 def activation_spec(mesh: Mesh, plan: ParallelPlan) -> P:
     """(batch, seq, d_model) residual-stream constraint."""
     return P(batch_axes(mesh, plan), None, None)
+
+
+def seq_activation_spec(mesh: Mesh, plan: ParallelPlan) -> P:
+    """(batch, seq/tp, d_model) sequence-sharded residual stream — the
+    between-blocks layout of the overlap-TP path (Megatron-SP, §4.1.4)."""
+    return P(batch_axes(mesh, plan), "model", None)
 
 
 def kv_cache_spec(mesh: Mesh, plan: ParallelPlan, seq_sharded: bool = True) -> P:

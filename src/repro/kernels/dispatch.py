@@ -72,6 +72,46 @@ def select_impl(impl: str, *, head_dim: int, window, q_offset) -> str:
         auto_ok=head_dim % 8 == 0 and head_dim <= 256)
 
 
+TP_IMPLS = ("auto", "gspmd", "overlap")
+
+
+def select_tp_impl(impl: str) -> str:
+    """Resolve ``ParallelPlan.tp_impl`` (survey §4.1.2/§5.2).
+
+    ``"gspmd"`` leaves tensor parallelism to XLA's SPMD partitioner (blocking
+    all-reduce after every row GEMM, full-size activations between blocks).
+    ``"overlap"`` selects the explicit ``shard_map`` ring path
+    (:mod:`repro.train.tensor_parallel`): collective matmuls + sequence-sharded
+    activations. ``"auto"`` picks overlap on TPU backends — the ring's
+    ``ppermute`` steps compile to async DMAs there, so the per-tick partial
+    GEMMs actually hide the transfer — and gspmd elsewhere (on CPU the ring
+    is semantically identical but the ticks serialize).
+    """
+    if impl not in TP_IMPLS:
+        raise ValueError(f"tp_impl must be one of {TP_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "overlap" if jax.default_backend() == "tpu" else "gspmd"
+    return impl
+
+
+def dispatch_tp_matmul(x, w, *, impl: str = "auto"):
+    """One ring-tick partial GEMM of the collective matmuls.
+
+    ``x``: (..., k) activation tile (one sequence chunk), ``w``: (k, f) weight
+    shard. Every partial product of the overlap-TP rings funnels through here
+    so the tile GEMM stays a single dispatch point: today it is always the XLA
+    dot (bitwise twin of the GSPMD path's local matmul — required by the
+    overlap-vs-gspmd equivalence tests); a fused Pallas tile GEMM can slot in
+    behind the same signature without touching the ring schedules. The fused
+    attention / expert-GEMM / SSD kernels are reached separately — the TP
+    layer bodies call :func:`dispatch_attention` / :func:`dispatch_expert_gemm`
+    / :func:`dispatch_ssd_scan` on the gathered tiles, so ``tp_impl="overlap"``
+    composes with ``attn_impl/moe_gemm_impl/ssm_impl = "pallas"``.
+    """
+    del impl  # reserved for a fused tile-GEMM kernel
+    return jnp.matmul(x, w)
+
+
 def select_gemm_impl(impl: str) -> str:
     """Resolve the expert-GEMM impl (the kernel pads every dim, so an explicit
     "pallas" is always honored)."""

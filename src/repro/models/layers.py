@@ -238,6 +238,58 @@ def attn_block(p, x, cfg, *, positions, window=0, causal=True, dtype=jnp.bfloat1
     return out.reshape(b, s, -1) @ p["wo"].astype(dtype)
 
 
+def attn_sublayer_tp(lp, x, cfg, ctx, *, positions, window=0,
+                     dtype=jnp.bfloat16, impl="auto"):
+    """Sequence-sharded attention sub-block for overlap TP (survey §4.1.2/4).
+
+    ``x``: (B, S/tp, d) sequence shard; ``lp`` holds this rank's head shards
+    (wq/wk/wv column-sharded, wo row-sharded — the shard_map in_specs from
+    ``core.sharding.overlap_param_specs`` deliver them pre-sliced). The ring
+    all-gather that re-materializes the full sequence is fused into the QKV
+    GEMM ticks; attention runs on this rank's head group through the usual
+    dispatcher (so ``attn_impl="pallas"`` composes); the output projection
+    ring-reduce-scatters back to the (B, S/tp, d) shard.
+    """
+    from repro.train.tensor_parallel import (  # noqa: PLC0415 (import cycle)
+        all_gather_matmul, matmul_reduce_scatter)
+    b, s_loc, _ = x.shape
+    s = s_loc * ctx.size
+    hd = cfg.head_dim
+    ws = (lp["wq"].astype(dtype), lp["wk"].astype(dtype),
+          lp["wv"].astype(dtype))
+    (q, k, v), _ = all_gather_matmul(ctx, x, ws)
+    if cfg.qkv_bias:
+        idx = jax.lax.axis_index(ctx.axis)
+
+        def bias(name, n_loc):
+            return jax.lax.dynamic_slice_in_dim(
+                lp[name].astype(dtype), idx * n_loc, n_loc, 0)
+        q = q + bias("bq", q.shape[-1])
+        k = k + bias("bk", k.shape[-1])
+        v = v + bias("bv", v.shape[-1])
+    q = q.reshape(b, s, q.shape[-1] // hd, hd)
+    k = k.reshape(b, s, k.shape[-1] // hd, hd)
+    v = v.reshape(b, s, v.shape[-1] // hd, hd)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    a = attention(q, k, v, causal=True, window=window,
+                  softcap=cfg.attn_logit_softcap, impl=impl)
+    return matmul_reduce_scatter(ctx, a.reshape(b, s, -1),
+                                 lp["wo"].astype(dtype))
+
+
+def mlp_sublayer_tp(p, x, ctx, dtype=jnp.bfloat16):
+    """Sequence-sharded SwiGLU for overlap TP: one ring all-gather fused into
+    both the gate and up GEMM ticks, ring reduce-scatter after down."""
+    from repro.train.tensor_parallel import (  # noqa: PLC0415 (import cycle)
+        all_gather_matmul, matmul_reduce_scatter)
+    (g, u), _ = all_gather_matmul(
+        ctx, x, (p["gate"].astype(dtype), p["up"].astype(dtype)))
+    return matmul_reduce_scatter(ctx, jax.nn.silu(g) * u,
+                                 p["down"].astype(dtype))
+
+
 # ---------------------------------------------------------------------------
 # MLP (SwiGLU)
 

@@ -1,7 +1,7 @@
-from .loss import cross_entropy, top1_accuracy
+from .loss import cross_entropy, cross_entropy_vp, top1_accuracy
 from .step import Hyper, TrainState, init_train_state, make_loss_fn, make_train_step
 
 __all__ = [
-    "cross_entropy", "top1_accuracy",
+    "cross_entropy", "cross_entropy_vp", "top1_accuracy",
     "Hyper", "TrainState", "init_train_state", "make_loss_fn", "make_train_step",
 ]

@@ -1,14 +1,36 @@
 """Cross-entropy over (possibly vocab-sharded) logits.
 
-Logits arrive fp32 (models upcast at the head). The log-softmax reduction over a
-``model``-sharded vocab dim lowers to a reduce + all-reduce pair under GSPMD —
-the vocab-parallel pattern from Megatron-LM (survey §4.1.2).
+Logits arrive fp32 (models upcast at the head). Two vocab-parallel flavors of
+the Megatron-LM pattern (survey §4.1.2):
+
+- :func:`cross_entropy` — written over full-vocab logits; under GSPMD a
+  ``model``-sharded vocab dim lowers the log-softmax to a reduce + all-reduce
+  pair automatically.
+- :func:`cross_entropy_vp` — the explicit ``shard_map`` twin for the overlap-TP
+  path (``train/tensor_parallel.py``): takes this rank's (…, V/tp) logits
+  shard and reduces with per-shard max/logsumexp/target-logit plus scalar
+  ``pmax``/``psum``, so the (B, S, V) logits tensor is never materialized or
+  all-gathered (the TODO formerly noted on ``pad_vocab_to_multiple``).
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _pmax_stopgrad(x, axis_name):
+    """pmax with a zero-cotangent VJP: the softmax max-shift is a
+    stop_gradient quantity (see :func:`cross_entropy`), and jax has no
+    differentiation rule for pmax."""
+    return jax.lax.pmax(x, axis_name)
+
+
+_pmax_stopgrad.defvjp(lambda x, a: (_pmax_stopgrad(x, a), None),
+                      lambda a, _, g: (jnp.zeros_like(g),))
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
@@ -26,6 +48,35 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
     if z_loss:
         nll = nll + z_loss * jnp.square(lse)
     return nll.mean()
+
+
+def cross_entropy_vp(logits: jax.Array, labels: jax.Array, *, axis_name: str,
+                     shard_index=None, z_loss: float = 0.0):
+    """Vocab-parallel cross-entropy over a ``shard_map`` vocab axis.
+
+    ``logits``: (..., V/tp) fp32 — this rank's vocab shard; ``labels``: (...)
+    global token ids. The softmax statistics reduce per shard first, then a
+    scalar-per-position ``pmax``/``psum`` pair completes them across
+    ``axis_name``; the target logit is a masked local gather + psum (exact:
+    one rank contributes, the rest add zeros). Returns per-position nll,
+    replicated over the vocab axis — callers own the mean/sum reduction.
+    """
+    if shard_index is None:
+        shard_index = jax.lax.axis_index(axis_name)
+    v_loc = logits.shape[-1]
+    m = _pmax_stopgrad(jax.lax.stop_gradient(logits.max(axis=-1)), axis_name)
+    shifted = logits - m[..., None]
+    se = jax.lax.psum(jnp.sum(jnp.exp(shifted), axis=-1), axis_name)
+    lse = jnp.log(se) + m
+    local = labels.astype(jnp.int32) - shard_index * v_loc
+    ok = (local >= 0) & (local < v_loc)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(local, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    label_logit = jax.lax.psum(jnp.where(ok, ll, 0.0), axis_name)
+    nll = lse - label_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return nll
 
 
 def top1_accuracy(logits: jax.Array, labels: jax.Array):

@@ -36,8 +36,21 @@ the forward recompute of microbatch ``m`` reaches stage ``p`` at tick
 stage input for at most ``2(P-1)`` ticks — the ring of ``2P-1`` slots is
 exactly enough, and the scan runs ``M + 2(P-1)`` ticks total.
 
+TP x PP composition (survey §4.1.2 x §4.1.3): when ``plan.tp_impl`` resolves
+to ``"overlap"`` and the mesh has a ``model`` axis >= 2, each stage tick runs
+the overlap tensor-parallel layer bodies (``train/tensor_parallel.py``) —
+collective-matmul ring steps *inside* each 1F1B tick, with the inter-stage
+``ppermute`` moving (microbatch, seq/tp, d) sequence shards instead of
+full-sequence activations (so the stage-to-stage transfer shrinks by tp too).
+The last stage's head keeps logits vocab-parallel and reduces with
+``cross_entropy_vp``; because its ring/psum collectives must execute
+uniformly across pods (the head predicate is per-stage, and per-recompute-
+tick in the 1F1B backward), it runs masked on every tick instead of behind
+the ``lax.cond`` — the V/tp vocab shard keeps that dead compute tp× smaller
+than a full-vocab head.
+
 Supported for decoder-only families (dense / vlm backbones); the hybrid/
-enc-dec/MoE archs pipeline equally in principle but are out of scope for this
+enc-dec archs pipeline equally in principle but are out of scope for this
 feature (EXPERIMENTS.md notes which configs exercise it).
 """
 
@@ -81,7 +94,6 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     layers_per_stage = cfg.n_layers // pp
     dtype = jnp.dtype(plan.compute_dtype)
     windows_all = jnp.asarray(_layer_windows(cfg))
-    layer_fwd = _decoder_layer_fwd(cfg, dtype, None, plan, batch_axes)
     baxes = batch_axes if batch_axes else None
     n_dp = 1
     for a in (batch_axes or ()):
@@ -89,11 +101,48 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     perm_fwd = [(i, (i + 1) % pp) for i in range(pp)]
     perm_bwd = [(i, (i - 1) % pp) for i in range(pp)]
 
+    # TP x PP: overlap tensor parallelism runs its ring steps inside each
+    # stage tick; activations rotate stage-to-stage as (mb, s/tp, d) shards.
+    # Same fallback contract as train.step: "auto" quietly keeps GSPMD when
+    # the ring path's preconditions fail; an explicit "overlap" raises.
+    from repro.kernels.dispatch import select_tp_impl
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1 and plan.tp_impl == "overlap":
+        raise ValueError(
+            "tp_impl='overlap' was requested explicitly but the pipeline mesh "
+            "has no 'model' axis of size >= 2 to run the rings on")
+    tp_overlap = tp > 1 and select_tp_impl(plan.tp_impl) == "overlap"
+    if tp_overlap:
+        from repro.train import tensor_parallel as tplib
+        try:
+            tplib.check_overlap_support(cfg, plan, tp)
+        except ValueError:
+            if plan.tp_impl == "overlap":
+                raise
+            tp_overlap = False
+    if tp_overlap:
+        tp_ctx = tplib.RingCtx("model", tp)
+        layer_fwd = tplib.tp_decoder_layer_fwd(cfg, plan, tp_ctx, dtype,
+                                               batch_axes, n_dp)
+    else:
+        tp_ctx = None
+        layer_fwd = _decoder_layer_fwd(cfg, dtype, None, plan, batch_axes)
+
     # param specs: layer stack sharded over pod on dim 0; the rest replicated
     # over pod (embed/lm_head/final_norm are small relative to the stack).
+    # Under overlap TP the model-axis column/row/vocab shards compose in.
     def param_specs(params):
         def one(path, leaf):
-            return P("pod") if "layers" in _names(path) else P()
+            names = _names(path)
+            if tp_overlap:
+                from repro.core.sharding import overlap_spec_for_param
+                spec = overlap_spec_for_param(names, tuple(leaf.shape), cfg)
+                if "layers" in names:
+                    parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+                    parts[0] = "pod"
+                    return P(*parts)
+                return spec
+            return P("pod") if "layers" in names else P()
         return jax.tree_util.tree_map_with_path(one, params)
 
     def _tick_factory(toks_mb, labs_mb, windows_l, positions):
@@ -103,9 +152,16 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         stage = jax.lax.axis_index("pod")
 
         def tick(params_local, buf, t):
-            # stage 0 ingests a fresh microbatch while filling
+            # stage 0 ingests a fresh microbatch while filling (under overlap
+            # TP the embedding is vocab-parallel and lands sequence-sharded,
+            # matching the (mb, s/tp, d) stage buffers)
             mb_idx = jnp.clip(t, 0, n_micro - 1)
-            fresh = _embed(params_local, toks_mb[mb_idx], cfg, dtype)
+            if tp_overlap:
+                from repro.train.tensor_parallel import tp_embed
+                fresh = tp_embed(params_local, toks_mb[mb_idx], cfg, dtype,
+                                 tp_ctx)
+            else:
+                fresh = _embed(params_local, toks_mb[mb_idx], cfg, dtype)
             x = jnp.where((stage == 0) & (t < n_micro), fresh, buf)
 
             def body(carry, xs):
@@ -124,6 +180,28 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             # skips the dead logits/xent compute everywhere else
             out_idx = jnp.clip(t - (pp - 1), 0, n_micro - 1)
             take = (stage == pp - 1) & (t >= pp - 1)
+            # MoE aux comes from *this stage's own layers*, so every stage
+            # contributes it for every real microbatch it processes (tick t
+            # carries microbatch t - stage); gating it on `take` would drop
+            # the load-balancing pressure of stages 0..P-2 entirely
+            aux_take = (t >= stage) & (t < stage + n_micro)
+
+            if tp_overlap:
+                # Vocab-parallel final stage: ring-AG fused into the head
+                # GEMM, per-shard + scalar-psum loss reductions — the
+                # (mb, s, V) logits tensor never materializes. The head's
+                # ring/psum collectives must execute uniformly across pods
+                # (the lax.cond predicate is per-stage, and in the 1F1B
+                # backward per-recompute-tick), so it runs masked on every
+                # tick instead of behind the cond; the V/tp vocab shard keeps
+                # the dead compute tp× smaller than a full-vocab head would be.
+                from repro.train.tensor_parallel import tp_head_nll
+                h = rms_norm(x, params_local["final_norm"]["scale"],
+                             cfg.rms_eps)
+                nll = tp_head_nll(params_local, h, labs_mb[out_idx], cfg,
+                                  tp_ctx, dtype, z_loss).mean()
+                mb_loss = jnp.where(take, nll, 0.0)
+                return x, mb_loss[None], jnp.where(aux_take, aux, 0.0)
 
             def head(xh):
                 h = rms_norm(xh, params_local["final_norm"]["scale"],
@@ -132,7 +210,7 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                 return cross_entropy(logits, labs_mb[out_idx], z_loss=z_loss)
 
             mb_loss = jax.lax.cond(take, head, lambda xh: jnp.float32(0.0), x)
-            return x, mb_loss[None], jnp.where(take, aux, 0.0)
+            return x, mb_loss[None], jnp.where(aux_take, aux, 0.0)
 
         return tick
 
@@ -155,7 +233,8 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             buf = jax.lax.ppermute(x, "pod", perm_fwd)
             return (buf, loss_sum + lc, aux_sum + ac), None
 
-        buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
+        buf0 = jnp.zeros((mb, s // tp if tp_overlap else s, cfg.d_model),
+                         dtype)
         zero = jnp.zeros((1,), jnp.float32)
         (_, loss_sum, aux_sum), _ = jax.lax.scan(
             fwd_tick, (buf0, zero, zero), jnp.arange(n_micro + pp - 1))
@@ -181,9 +260,15 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         ring = 2 * pp - 1
         n_ticks = n_micro + 2 * (pp - 1)
         # loss = pmean_data(psum_pod(Σ_m mb_loss) / M): each microbatch loss
-        # carries weight 1/(M · n_dp) toward the global scalar
-        w_loss = g[0] / (n_micro * n_dp)
-        w_aux = g[1] / (n_micro * n_dp)
+        # carries weight 1/(M · n_dp) toward the global scalar. Under overlap
+        # TP, mb_loss is *replicated* over the model axis (every rank computes
+        # it cooperatively through the ring/psum collectives), so the weight
+        # splits across the tp replicas: the psum transposes inside the vjp
+        # re-sum the per-rank seeds, and a full seed per rank would overcount
+        # every gradient by exactly tp.
+        w_scale = n_micro * n_dp * (tp if tp_overlap else 1)
+        w_loss = g[0] / w_scale
+        w_aux = g[1] / w_scale
 
         def btick(carry, t):
             fbuf, xring, dbuf, gacc = carry
@@ -217,7 +302,8 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             dbuf_next = jax.lax.ppermute(dx_in, "pod", perm_bwd)
             return (fbuf_next, xring, dbuf_next, gacc), None
 
-        buf0 = jnp.zeros((mb, s, cfg.d_model), dtype)
+        buf0 = jnp.zeros((mb, s // tp if tp_overlap else s, cfg.d_model),
+                         dtype)
         gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                              params_local)
         init = (buf0, jnp.zeros((ring,) + buf0.shape, dtype),
@@ -226,12 +312,20 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
 
         # the 1/(M·n_dp) weight is already in the seeds, so grads just sum
         # across DP shards; embed/head/final_norm live on every pod but only
-        # one stage produced their cotangent — psum over pod completes them
+        # one stage produced their cotangent — psum over pod completes them.
+        # Under overlap TP, model-replicated leaves (norm scales) saw only
+        # this rank's sequence chunk — psum over model completes those.
         def finish(path, g_leaf):
             if batch_axes:
                 g_leaf = jax.lax.psum(g_leaf, batch_axes)
             if "layers" not in _names(path):
                 g_leaf = jax.lax.psum(g_leaf, "pod")
+            if tp_overlap:
+                from repro.core.sharding import overlap_spec_for_param
+                spec = overlap_spec_for_param(
+                    _names(path), tuple(g_leaf.shape), cfg)
+                if all(ax is None for ax in spec):
+                    g_leaf = jax.lax.psum(g_leaf, "model")
             return g_leaf
 
         return jax.tree_util.tree_map_with_path(finish, gacc)

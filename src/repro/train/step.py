@@ -9,6 +9,14 @@ Gradient accumulation (``plan.microbatches``) runs as a ``lax.scan`` over
 microbatch slices — constant HLO size, and under pipeline parallelism the same
 slicing provides the pipeline's microbatches.
 
+Tensor parallelism (survey §4.1.2): with a ``mesh`` whose ``model`` axis is
+>= 2 and ``plan.tp_impl`` resolving to ``"overlap"``, the step swaps its loss
+for the explicit ring path (``train.tensor_parallel.make_tp_loss_fn``) —
+collective matmuls + sequence-sharded activations instead of GSPMD's blocking
+all-reduces. ``tp_impl="auto"`` only picks it on TPU backends; an unsupported
+family under ``"auto"`` silently keeps the GSPMD loss, while an explicit
+``"overlap"`` raises.
+
 ZeRO-1 (survey §6.2.1): pass ``mesh`` and the step shards the optimizer work
 over the ``data`` axis. The fp32 microbatch accumulator is *born scattered*
 (constrained to ``core.sharding.opt_state_specs``), so each microbatch's grads
@@ -70,10 +78,35 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
     return jax.tree.map(split, batch)
 
 
+def _overlap_loss_fn(model: Model, plan: ParallelPlan, hyper: Hyper,
+                     mesh: Mesh) -> Optional[Callable]:
+    """The overlap-TP loss when the plan/mesh select it, else None."""
+    from repro.kernels.dispatch import select_tp_impl  # noqa: PLC0415
+    if mesh is None or mesh.shape.get("model", 1) < 2:
+        if plan.tp_impl == "overlap":
+            raise ValueError(
+                "tp_impl='overlap' was requested explicitly but the step has "
+                "no 'model' mesh axis of size >= 2 to run the rings on")
+        return None
+    if select_tp_impl(plan.tp_impl) != "overlap":
+        return None
+    from repro.train import tensor_parallel as tplib  # noqa: PLC0415
+    baxes = tuple(a for a in ("pod", "data")
+                  if a in mesh.shape and (a != "pod" or plan.pp == 1))
+    try:
+        return tplib.make_tp_loss_fn(model.cfg, plan, mesh, baxes,
+                                     z_loss=hyper.z_loss)
+    except ValueError:
+        if plan.tp_impl == "overlap":
+            raise                     # explicit request: surface the reason
+        return None                   # auto: fall back to the GSPMD loss
+
+
 def make_train_step(model: Model, plan: ParallelPlan,
                     hyper: Hyper = Hyper(),
                     mesh: Optional[Mesh] = None) -> Callable:
-    loss_fn = make_loss_fn(model, hyper)
+    loss_fn = (_overlap_loss_fn(model, plan, hyper, mesh)
+               or make_loss_fn(model, hyper))
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     use_zero = (mesh is not None and plan.zero_stage >= 1
                 and "data" in mesh.shape and mesh.shape["data"] > 1)

@@ -1,0 +1,492 @@
+"""Overlap-aware tensor parallelism: collective matmuls + sequence sharding.
+
+The GSPMD tensor-parallel path (``core/sharding.py``) is pure layout
+annotation: XLA inserts a blocking all-reduce after every row GEMM and keeps
+full-size ``(B, S, d)`` activations replicated between blocks — the exposed-
+communication regime the survey's communication-optimization chapter (§4.1.2,
+§5.2) identifies as the dominant TP scaling tax. This module is the explicit
+``shard_map`` alternative, selected by ``ParallelPlan.tp_impl = "overlap"``:
+
+- **Collective matmuls** (ring decomposition). The column GEMM's sequence
+  all-gather and the row GEMM's reduce-scatter are decomposed into
+  ``ppermute`` ring steps interleaved with partial GEMM tiles:
+
+  * :func:`all_gather_matmul` — input ``x`` is sequence-sharded
+    ``(B, S/tp, d)``; each tick multiplies the sequence chunk the rank
+    already holds against its column shard of the weight(s) while the chunk
+    is simultaneously ``ppermute``-d to the next rank. After ``tp`` ticks
+    every rank has the full-sequence output of *its* feature shard — the
+    all-gather that re-materializes the full sequence is fused into the
+    first QKV/gate GEMM tick instead of blocking in front of it.
+  * :func:`matmul_reduce_scatter` — each tick multiplies the sequence chunk
+    destined for the rank ``tp-1-k`` hops away and adds it into an
+    accumulator that rides the ring; the tile GEMM for one chunk overlaps
+    the in-flight transfer of the previous partial sum.
+
+  Both are ``jax.custom_vjp``: the forward saves only its inputs and the
+  backward runs the mirrored ring in the reversed direction (an all-gather
+  matmul's gradient is a matmul reduce-scatter and vice versa; weight
+  gradients contract against the ring-re-gathered activations in a single
+  GEMM so they stay bitwise-comparable to the GSPMD twins). Every partial
+  tile funnels through :func:`repro.kernels.dispatch.dispatch_tp_matmul`.
+
+- **Sequence-sharded activations** (Megatron-SP, survey §4.1.4). Between
+  blocks, activations stay ``(batch, seq/tp, d)``: RMSNorm, residual adds and
+  the embedding lookup run on sequence shards; only the gathered interior of
+  each block (attention heads / expert FFN / SSD heads — all model-sharded)
+  ever sees the full sequence.
+
+- **Vocab-parallel loss**: the LM head GEMM keeps logits ``(B, S, V/tp)`` and
+  :func:`repro.train.loss.cross_entropy_vp` reduces with per-shard
+  max/logsumexp/target-logit plus scalar-sized ``psum`` — the ``(B, S, V)``
+  logits tensor is never materialized or all-gathered.
+
+The family block bodies live next to their GSPMD twins
+(:func:`repro.models.layers.attn_sublayer_tp` /
+:func:`repro.models.moe.moe_block_tp` / :func:`repro.models.ssm.ssm_block_tp`)
+and still route attention / expert GEMMs / SSD scans through
+``repro.kernels.dispatch``, so ``tp_impl="overlap"`` composes with the fused
+Pallas kernels. :func:`make_tp_loss_fn` assembles the whole training-path
+loss; ``train/pipeline.py`` reuses the same layer bodies for TP x PP (ring
+steps inside each 1F1B tick). Numerical contract, tested in
+tests/test_tensor_parallel.py: overlap loss/grads match the GSPMD path on a
+2-way model mesh for the dense, MoE and Mamba2 families.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sharding as shardlib
+from repro.core.compat import shard_map
+from repro.core.config import Family, ModelConfig, ParallelPlan
+from repro.kernels.dispatch import dispatch_tp_matmul
+from repro.models.families import _layer_windows, _remat
+from repro.models.layers import rms_norm
+from repro.train.loss import cross_entropy_vp
+
+
+@dataclasses.dataclass(frozen=True)
+class RingCtx:
+    """Static ring parameters (hashable: rides custom_vjp nondiff_argnums)."""
+    axis: str = "model"
+    size: int = 2
+
+    @property
+    def perm_fwd(self):
+        return [(i, (i + 1) % self.size) for i in range(self.size)]
+
+    @property
+    def perm_bwd(self):
+        return [(i, (i - 1) % self.size) for i in range(self.size)]
+
+
+def _index(ctx: RingCtx):
+    return jax.lax.axis_index(ctx.axis) if ctx.size > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# collective matmuls (ring-decomposed, custom-VJP)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def all_gather_matmul(ctx: RingCtx, x, ws):
+    """Column GEMM with the sequence all-gather fused into the ring ticks.
+
+    ``x``: (B, S/tp, d) sequence shard; ``ws``: tuple of (d, f_loc) column
+    shards. Returns ``(outs, x_full)`` where ``outs[i]`` is (B, S, f_loc) —
+    the full-sequence product against this rank's feature shard — and
+    ``x_full`` is (B, S, d), the gathered input (a free by-product of the
+    ring; callers that project against replicated weights, e.g. Mamba2's
+    B/C, reuse it). Tick ``k`` multiplies the chunk the rank already holds
+    while ``ppermute`` moves it one rank forward.
+    """
+    outs, xg = _ag_matmul_impl(ctx, x, ws)
+    return outs, xg
+
+
+def _ag_matmul_impl(ctx: RingCtx, x, ws):
+    t, s_loc = ctx.size, x.shape[1]
+    idx = _index(ctx)
+    outs = [jnp.zeros(x.shape[:1] + (t * s_loc, w.shape[-1]),
+                      jnp.result_type(x.dtype, w.dtype)) for w in ws]
+    xg = jnp.zeros(x.shape[:1] + (t * s_loc,) + x.shape[2:], x.dtype)
+    cur = x
+    for k in range(t):
+        start = ((idx - k) % t) * s_loc
+        for i, w in enumerate(ws):
+            part = dispatch_tp_matmul(cur, w).astype(outs[i].dtype)
+            outs[i] = jax.lax.dynamic_update_slice_in_dim(
+                outs[i], part, start, axis=1)
+        xg = jax.lax.dynamic_update_slice_in_dim(xg, cur, start, axis=1)
+        if k < t - 1:
+            cur = jax.lax.ppermute(cur, ctx.axis, ctx.perm_fwd)
+    return tuple(outs), xg
+
+
+def _ag_matmul_fwd(ctx, x, ws):
+    return all_gather_matmul(ctx, x, ws), (x, ws)
+
+
+def _ag_matmul_bwd(ctx, res, cts):
+    """Mirrored reversed ring: dx is a reduce-scatter of Σ_w dout_w · w_wᵀ
+    (plus the gathered-copy cotangent), dw_w contracts the re-gathered x
+    against dout_w in one GEMM (bitwise twin of the GSPMD transpose)."""
+    x, ws = res
+    douts, dxg = cts
+    t, s_loc = ctx.size, x.shape[1]
+    idx = _index(ctx)
+    cur, acc = x, None
+    xg = jnp.zeros(x.shape[:1] + (t * s_loc,) + x.shape[2:], x.dtype)
+    for k in range(t):
+        # re-gather x (for the dw GEMMs): reversed ring holds chunk idx+k
+        xg = jax.lax.dynamic_update_slice_in_dim(
+            xg, cur, ((idx + k) % t) * s_loc, axis=1)
+        # reduce-scatter dx: this tick's tile is for the chunk whose
+        # accumulator currently sits on this rank (dest (idx + k + 1) % t)
+        start = ((idx + k + 1) % t) * s_loc
+        tile = jax.lax.dynamic_slice_in_dim(dxg, start, s_loc, axis=1)
+        tile = tile.astype(jnp.result_type(x.dtype, *(w.dtype for w in ws))
+                           if ws else tile.dtype)
+        for w, dout in zip(ws, douts):
+            d_chunk = jax.lax.dynamic_slice_in_dim(dout, start, s_loc, axis=1)
+            tile = tile + dispatch_tp_matmul(d_chunk, w.T).astype(tile.dtype)
+        acc = tile if k == 0 else acc + tile
+        if k < t - 1:
+            cur = jax.lax.ppermute(cur, ctx.axis, ctx.perm_bwd)
+            acc = jax.lax.ppermute(acc, ctx.axis, ctx.perm_bwd)
+    dws = tuple(
+        jnp.einsum("bsd,bsf->df", xg.astype(jnp.float32),
+                   dout.astype(jnp.float32)).astype(w.dtype)
+        for w, dout in zip(ws, douts))
+    return acc.astype(x.dtype), dws
+
+
+all_gather_matmul.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def matmul_reduce_scatter(ctx: RingCtx, h, w):
+    """Row GEMM with the reduce-scatter fused into the ring ticks.
+
+    ``h``: (B, S, f_loc) full-sequence activation on this rank's feature
+    shard; ``w``: (f_loc, d) row shard. Returns (B, S/tp, d) — this rank's
+    sequence chunk of the summed product. Tick ``k`` multiplies the chunk
+    whose partial-sum accumulator currently sits on this rank, then the
+    accumulator rides the ring one rank forward; the last tick adds the
+    rank's own chunk and keeps it.
+    """
+    return _rs_matmul_impl(ctx, h, w)
+
+
+def _rs_matmul_impl(ctx: RingCtx, h, w):
+    t = ctx.size
+    s_loc = h.shape[1] // t
+    idx = _index(ctx)
+    acc = None
+    for k in range(t):
+        start = ((idx - k - 1) % t) * s_loc
+        tile = dispatch_tp_matmul(
+            jax.lax.dynamic_slice_in_dim(h, start, s_loc, axis=1), w)
+        acc = tile if k == 0 else acc + tile
+        if k < t - 1:
+            acc = jax.lax.ppermute(acc, ctx.axis, ctx.perm_fwd)
+    return acc
+
+
+def _rs_matmul_fwd(ctx, h, w):
+    return matmul_reduce_scatter(ctx, h, w), (h, w)
+
+
+def _rs_matmul_bwd(ctx, res, dout):
+    """Mirrored reversed ring: dh re-gathers the output cotangent (one ring)
+    and multiplies each landing chunk by wᵀ; dw contracts h against the
+    gathered cotangent in one GEMM."""
+    h, w = res
+    t, s_loc = ctx.size, dout.shape[1]
+    idx = _index(ctx)
+    cur = dout
+    dg = jnp.zeros(dout.shape[:1] + (t * s_loc,) + dout.shape[2:], dout.dtype)
+    dh = jnp.zeros_like(h)
+    for k in range(t):
+        start = ((idx + k) % t) * s_loc
+        dg = jax.lax.dynamic_update_slice_in_dim(dg, cur, start, axis=1)
+        dh = jax.lax.dynamic_update_slice_in_dim(
+            dh, dispatch_tp_matmul(cur, w.T).astype(h.dtype), start, axis=1)
+        if k < t - 1:
+            cur = jax.lax.ppermute(cur, ctx.axis, ctx.perm_bwd)
+    dw = jnp.einsum("bsf,bsd->fd", h.astype(jnp.float32),
+                    dg.astype(jnp.float32)).astype(w.dtype)
+    return dh, dw
+
+
+matmul_reduce_scatter.defvjp(_rs_matmul_fwd, _rs_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def ring_all_gather(ctx: RingCtx, x):
+    """(B, S/tp, ...) sequence shard -> (B, S, ...) via the ppermute ring.
+
+    Dedicated VJP (rather than ``all_gather_matmul`` with no weights): the
+    gather's transpose is exactly the mirrored reduce-scatter, with no dead
+    re-gather ring in the backward."""
+    return _ag_matmul_impl(ctx, x, ())[1]
+
+
+ring_all_gather.defvjp(
+    lambda ctx, x: (ring_all_gather(ctx, x), None),
+    lambda ctx, _, dxg: (_ring_rs_impl(ctx, dxg),))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def ring_reduce_scatter(ctx: RingCtx, x):
+    """(B, S, ...) per-rank partial -> (B, S/tp, ...) summed sequence chunk.
+
+    Same accumulator-rides-the-ring schedule as :func:`matmul_reduce_scatter`
+    but without the GEMM (used e.g. by the vocab-parallel embedding, whose
+    per-rank partials are masked row lookups). Backward is the mirrored
+    all-gather: the sum's transpose replicates the chunk cotangents."""
+    return _ring_rs_impl(ctx, x)
+
+
+def _ring_rs_impl(ctx: RingCtx, x):
+    t = ctx.size
+    s_loc = x.shape[1] // t
+    idx = _index(ctx)
+    acc = None
+    for k in range(t):
+        start = ((idx - k - 1) % t) * s_loc
+        tile = jax.lax.dynamic_slice_in_dim(x, start, s_loc, axis=1)
+        acc = tile if k == 0 else acc + tile
+        if k < t - 1:
+            acc = jax.lax.ppermute(acc, ctx.axis, ctx.perm_fwd)
+    return acc
+
+
+def _ring_rs_fwd(ctx, x):
+    return ring_reduce_scatter(ctx, x), None
+
+
+def _ring_rs_bwd(ctx, _, dout):
+    return (_ag_matmul_impl(ctx, dout, ())[1],)
+
+
+ring_reduce_scatter.defvjp(_ring_rs_fwd, _ring_rs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# sequence-sharded embedding / head
+
+
+def tp_embed(params, tokens, cfg: ModelConfig, dtype, ctx: RingCtx):
+    """Vocab-parallel embedding producing a sequence-sharded residual stream.
+
+    ``tokens``: (B, S) — the full (replicated-over-model) ids. The table is
+    vocab-sharded (V/tp, d); each rank looks up every position from *its*
+    shard (zeros where the id lives elsewhere) and a ring reduce-scatter sums
+    the partials straight into (B, S/tp, d) sequence chunks — exact, since
+    every row has exactly one non-zero contributor."""
+    tab = params["embed"]["tok"]
+    v_loc = tab.shape[0]
+    local = tokens.astype(jnp.int32) - _index(ctx) * v_loc
+    ok = (local >= 0) & (local < v_loc)
+    # cast to the compute dtype *before* the ring: each row has exactly one
+    # non-zero contributor, so no cross-rank accumulation happens and the
+    # ppermute ticks move half the bytes under bf16
+    rows = jnp.take(tab, jnp.clip(local, 0, v_loc - 1), axis=0).astype(dtype)
+    rows = jnp.where(ok[..., None], rows, jnp.zeros((), dtype))
+    x = ring_reduce_scatter(ctx, rows)
+    if cfg.scale_embed:
+        import numpy as np
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def tp_head_nll(params, x, labels, cfg: ModelConfig, ctx: RingCtx, dtype,
+                z_loss: float = 0.0):
+    """LM head + vocab-parallel cross-entropy on a (B, S/tp, d) shard.
+
+    The sequence all-gather is fused into the head GEMM ticks; logits stay
+    vocab-sharded (B, S, V/tp) and reduce via per-shard + scalar-psum
+    (:func:`repro.train.loss.cross_entropy_vp`). Returns per-position nll
+    (B, S), replicated over the model axis."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(dtype).T
+    else:
+        w = params["lm_head"]["w"].astype(dtype)
+    (logits,), _ = all_gather_matmul(ctx, x, (w,))
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    logits = logits.astype(jnp.float32)
+    v_loc = logits.shape[-1]
+    idx = _index(ctx)
+    if v_loc * ctx.size != cfg.vocab:
+        # Megatron-style padded vocab: mask this shard's padded tail
+        gid = idx * v_loc + jnp.arange(v_loc)
+        logits = jnp.where(gid >= cfg.vocab, -1e9, logits)
+    return cross_entropy_vp(logits, labels, axis_name=ctx.axis,
+                            shard_index=idx, z_loss=z_loss)
+
+
+# ---------------------------------------------------------------------------
+# family layer bodies (sequence-sharded residual stream)
+
+
+def tp_decoder_layer_fwd(cfg: ModelConfig, plan: ParallelPlan, ctx: RingCtx,
+                         dtype, batch_axes: Tuple[str, ...] = ("data",),
+                         n_dp: int = 1):
+    """Sequence-sharded twin of families._decoder_layer_fwd (dense / MoE)."""
+    from repro.models import moe as moe_lib
+    from repro.models.layers import attn_sublayer_tp, mlp_sublayer_tp
+    from jax.ad_checkpoint import checkpoint_name
+    alternating = bool(cfg.local_global_alternating and cfg.sliding_window)
+
+    def layer(x, lp, window, positions):
+        h = rms_norm(x, lp["norm1"]["scale"], cfg.rms_eps)
+        a = attn_sublayer_tp(
+            lp["attn"], h, cfg, ctx, positions=positions,
+            window=window if alternating else cfg.sliding_window,
+            dtype=dtype, impl=plan.attn_impl)
+        a = checkpoint_name(a, "attn_out")
+        if cfg.post_norm:
+            a = rms_norm(a, lp["norm1_post"]["scale"], cfg.rms_eps)
+        x = x + a
+        h = rms_norm(x, lp["norm2"]["scale"], cfg.rms_eps)
+        if cfg.family == Family.MOE:
+            m, aux = moe_lib.moe_block_tp(lp["moe"], h, cfg, dtype, ctx, plan,
+                                          batch_axes=batch_axes, n_dp=n_dp)
+        else:
+            m, aux = mlp_sublayer_tp(lp["mlp"], h, ctx, dtype), jnp.float32(0.0)
+        if cfg.post_norm:
+            m = rms_norm(m, lp["norm2_post"]["scale"], cfg.rms_eps)
+        return x + m, aux
+    return layer
+
+
+def tp_ssm_layer_fwd(cfg: ModelConfig, plan: ParallelPlan, ctx: RingCtx, dtype):
+    """Sequence-sharded twin of the Mamba2 layer body."""
+    from repro.models import ssm as ssm_lib
+    from jax.ad_checkpoint import checkpoint_name
+
+    def layer(x, lp, window, positions):
+        del window, positions
+        h = rms_norm(x, lp["norm1"]["scale"], cfg.rms_eps)
+        y = ssm_lib.ssm_block_tp(lp["ssm"], h, cfg, dtype, ctx, plan)
+        y = checkpoint_name(y, "block_out")
+        return x + y, jnp.float32(0.0)
+    return layer
+
+
+# ---------------------------------------------------------------------------
+# whole-model loss
+
+
+def check_overlap_support(cfg: ModelConfig, plan: ParallelPlan, tp: int):
+    """Static preconditions for the ring path. Raises ValueError otherwise."""
+    bad = []
+    if cfg.family not in (Family.DENSE, Family.MOE, Family.SSM) \
+            or cfg.is_enc_dec or cfg.vision_tokens:
+        bad.append(f"family {cfg.family!r} (dense/moe/ssm decoder-only)")
+    vocab = cfg.vocab
+    if plan.pad_vocab_to_multiple:
+        vocab = -(-vocab // plan.pad_vocab_to_multiple) * plan.pad_vocab_to_multiple
+    if vocab % tp:
+        bad.append(f"vocab {vocab} % tp {tp} != 0 (set pad_vocab_to_multiple)")
+    if cfg.family in (Family.DENSE, Family.MOE):
+        if cfg.pos_emb != "rope":
+            bad.append(f"pos_emb {cfg.pos_emb!r}")
+        if cfg.n_heads % tp or cfg.n_kv_heads % tp:
+            bad.append(f"heads ({cfg.n_heads}, {cfg.n_kv_heads}) % tp != 0")
+    if cfg.family == Family.DENSE and cfg.d_ff % tp:
+        bad.append(f"d_ff {cfg.d_ff} % tp != 0")
+    if cfg.family == Family.MOE:
+        if cfg.moe.d_expert % tp:
+            bad.append(f"d_expert {cfg.moe.d_expert} % tp != 0")
+        if cfg.moe.num_shared_experts and \
+                (cfg.moe.d_expert * cfg.moe.num_shared_experts) % tp:
+            bad.append("shared-expert width % tp != 0")
+    if cfg.family == Family.SSM:
+        di = cfg.ssm.expand * cfg.d_model
+        if di % tp or (di // cfg.ssm.head_dim) % tp:
+            bad.append(f"d_inner {di} or heads % tp != 0")
+        if cfg.ssm.n_groups != 1:
+            bad.append(f"n_groups {cfg.ssm.n_groups} != 1")
+    if bad:
+        raise ValueError("tp_impl='overlap' unsupported here: " + "; ".join(bad))
+
+
+def make_tp_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
+                    batch_axes: Tuple[str, ...] = ("data",),
+                    z_loss: float = 0.0):
+    """Overlap-TP loss_fn(params, batch): the shard_map twin of
+    ``train.step.make_loss_fn`` with sequence-sharded activations.
+
+    Requires a ``model`` mesh axis of size >= 2, seq % tp == 0, and the
+    family/width divisibilities of :func:`check_overlap_support`. Numerics
+    match the GSPMD path: same per-token math, loss reduced as
+    psum-of-sums / global-count. MoE note: routing runs on the ring-gathered
+    token set of each data shard, so with the default capacity factor the
+    dropping policy is per-data-shard (exactly GSPMD's when dp == 1).
+    """
+    if mesh.shape.get("model", 1) < 2:
+        raise ValueError("tp_impl='overlap' needs a 'model' mesh axis >= 2")
+    tp = mesh.shape["model"]
+    check_overlap_support(cfg, plan, tp)
+    if plan.dp_shard > 1:
+        raise ValueError("tp_impl='overlap' expects dp_shard == 1 "
+                         "(params enter the shard_map replicated over data)")
+    ctx = RingCtx("model", tp)
+    dtype = jnp.dtype(plan.compute_dtype)
+    windows_all = jnp.asarray(_layer_windows(cfg))
+    baxes = batch_axes if batch_axes else None
+    n_dp = 1
+    for a in (batch_axes or ()):
+        n_dp *= mesh.shape[a]
+
+    if cfg.family == Family.SSM:
+        layer = tp_ssm_layer_fwd(cfg, plan, ctx, dtype)
+    else:
+        layer = tp_decoder_layer_fwd(cfg, plan, ctx, dtype, batch_axes, n_dp)
+
+    def local_fn(params_l, tokens, labels):
+        b, s = tokens.shape
+        assert s % tp == 0, f"seq {s} must divide tp {tp} for overlap TP"
+        x = tp_embed(params_l, tokens, cfg, dtype, ctx)
+        positions = jnp.arange(s)
+
+        def body(carry, xs):
+            xc, aux = carry
+            lp, w = xs
+            xn, a = layer(xc, lp, w, positions)
+            return (xn, aux + a), None
+
+        body = _remat(body, plan.remat)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((1,), jnp.float32)),
+            (params_l["layers"], windows_all))
+        x = rms_norm(x, params_l["final_norm"]["scale"], cfg.rms_eps)
+        nll = tp_head_nll(params_l, x, labels, cfg, ctx, dtype, z_loss)
+        tot = nll.sum()
+        if baxes:
+            tot = jax.lax.psum(tot, baxes)
+        loss = tot / (b * n_dp * s)
+        return jnp.stack([loss, aux[0]])
+
+    def loss_fn(params, batch):
+        pspecs = shardlib.overlap_param_specs(params, cfg, plan, mesh)
+        v = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(pspecs, P(baxes, None), P(baxes, None)),
+            out_specs=P(),
+        )(params, batch["tokens"], batch["labels"])
+        loss, aux = v[0], v[1]
+        return loss + aux, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn
