@@ -436,6 +436,151 @@ def bench_tp():
 
 
 # ---------------------------------------------------------------------------
+# survey §4.1.4 (context parallelism: gather vs ring at long S)
+
+_CP_BENCH_SCRIPT = r"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import Family, InputShape, ModelConfig, ParallelPlan
+from repro.core.compat import shard_map
+from repro.data import SyntheticDataset
+from repro.models import build_model
+from repro.models.layers import init_attn
+from repro.perf.hlo_cost import analyze_hlo
+from repro.train import Hyper, make_loss_fn
+from repro.train import executor as exlib
+from repro.train.executor import make_executor_loss_fn
+from repro.train.tensor_parallel import RingCtx
+
+CP = 2
+mesh = jax.make_mesh((CP,), ("cp",))
+cfg = ModelConfig("bcp", Family.DENSE, n_layers=2, d_model=128, n_heads=2,
+                  n_kv_heads=2, d_ff=256, vocab=512)
+rng = np.random.default_rng(0)
+attn_p = jax.tree.map(lambda a: a.astype(jnp.float32),
+                      init_attn(jax.random.PRNGKey(0), cfg))
+pspec = jax.tree.map(lambda _: P(), attn_p)
+
+
+def bench_attn_block(s, mode, iters):
+    # fwd+bwd of ONE attention block -- the 4.1.4 headline: ring keeps the
+    # per-device working set at S/cp chunks while cp=1 / gather hold full-S
+    # K/V (and the backward's full-S softmax residuals)
+    x = jnp.asarray(rng.standard_normal((1, s, cfg.d_model)), jnp.float32)
+    if mode == "cp1":
+        def loss(p, xv):
+            a = exlib.attn_block(exlib.local_context(), p, xv, cfg,
+                                 positions=jnp.arange(s), dtype=jnp.float32)
+            return jnp.sum(a)
+        xin = x
+    else:
+        ctx = exlib.ParallelContext(cp=RingCtx("cp", CP), cp_impl=mode)
+
+        def local(p, xl):
+            positions = exlib.cp_local_positions(ctx, xl.shape[1])
+            a = exlib.attn_block(ctx, p, xl, cfg, positions=positions,
+                                 dtype=jnp.float32)
+            return jax.lax.psum(jnp.sum(a), "cp")
+
+        def loss(p, xv):
+            return shard_map(local, mesh=mesh,
+                             in_specs=(pspec, P(None, "cp", None)),
+                             out_specs=P())(p, xv)
+        xin = x[:, exlib.zigzag_permutation(s, CP)] if mode == "ring" else x
+    gf = jax.jit(jax.value_and_grad(loss))
+    compiled = gf.lower(attn_p, xin).compile()
+    ma = compiled.memory_analysis()
+    temp = getattr(ma, "temp_size_in_bytes", None) if ma else None
+    cost = analyze_hlo(compiled.as_text(), CP if mode != "cp1" else 1)
+    jax.block_until_ready(compiled(attn_p, xin))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(compiled(attn_p, xin))
+    us = (time.perf_counter() - t0) / iters * 1e6
+    print(f"ROW cp.attnblock.s{s}.{mode},{us:.1f},"
+          f"tokens_per_s={s/(us/1e6):.0f};peak_temp_bytes={temp};"
+          f"collective_link_bytes={cost.collective_link_bytes:.0f}",
+          flush=True)
+    return temp
+
+
+temps = {}
+for s in (4096, 16384):
+    for mode in ("cp1", "gather", "ring"):
+        temps[(s, mode)] = bench_attn_block(s, mode, iters=1 if s > 8192 else 2)
+# the acceptance headline: ring's peak attention-block activation memory at
+# S=16k sits below the cp=1 baseline (KV + softmax residuals shrink by cp).
+# memory_analysis() can be unavailable on some backends — report that
+# instead of tripping a TypeError on None < None
+if temps[(16384, "ring")] is not None and temps[(16384, "cp1")] is not None:
+    assert temps[(16384, "ring")] < temps[(16384, "cp1")], temps
+    print(f"ROW cp.attnblock.s16384.ring_vs_cp1,0.0,"
+          f"peak_temp_ratio={temps[(16384, 'ring')]/temps[(16384, 'cp1')]:.3f};"
+          f"ring_below_cp1_baseline=True", flush=True)
+else:
+    print("ROW cp.attnblock.s16384.ring_vs_cp1,0.0,"
+          "peak_temp_ratio=unavailable;memory_analysis_unsupported=True",
+          flush=True)
+
+# whole-model loss+grad at the short end (both impls vs the GSPMD baseline)
+shape = InputShape("b", 4096, 2, "train")
+ds = SyntheticDataset(cfg, shape)
+batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+plan0 = ParallelPlan(remat="none", compute_dtype="float32")
+model = build_model(cfg, plan0)
+params = model.init(jax.random.PRNGKey(0))
+losses = {}
+toks = shape.global_batch * shape.seq_len
+for mode in ("cp1", "gather", "ring"):
+    if mode == "cp1":
+        lf = make_loss_fn(model, Hyper(z_loss=0.0))
+    else:
+        plan = ParallelPlan(remat="none", compute_dtype="float32", cp=CP,
+                            cp_impl=mode)
+        lf = make_executor_loss_fn(cfg, plan, mesh, (), z_loss=0.0)
+    gf = jax.jit(jax.value_and_grad(lambda p, b: lf(p, b)[0]))
+    compiled = gf.lower(params, batch).compile()
+    ma = compiled.memory_analysis()
+    temp = getattr(ma, "temp_size_in_bytes", None) if ma else None
+    cost = analyze_hlo(compiled.as_text(), CP if mode != "cp1" else 1)
+    loss, _ = jax.block_until_ready(compiled(params, batch))
+    losses[mode] = float(loss)
+    t0 = time.perf_counter()
+    for _ in range(2):
+        jax.block_until_ready(compiled(params, batch))
+    us = (time.perf_counter() - t0) / 2 * 1e6
+    print(f"ROW cp.model.dense.s4096.{mode},{us:.1f},"
+          f"tokens_per_s={toks/(us/1e6):.0f};peak_temp_bytes={temp};"
+          f"collective_link_bytes={cost.collective_link_bytes:.0f}",
+          flush=True)
+assert abs(losses["gather"] - losses["cp1"]) < 1e-4, losses
+assert abs(losses["ring"] - losses["cp1"]) < 1e-4, losses
+print("CP_BENCH_OK", flush=True)
+"""
+
+
+def bench_cp():
+    """tokens/sec + compiled peak memory + collective bytes for
+    ``cp_impl`` ∈ {gather, ring} vs the cp=1 baseline at S ∈ {4k, 16k}
+    (survey §4.1.4, long-context training).
+
+    The attention-block rows are the headline: at S=16k the ring path's
+    compiled peak activation memory must sit measurably below the cp=1
+    baseline (each device holds S/cp KV chunks and S/(2·cp) score tiles
+    instead of full-S tensors) — asserted in the subprocess, recorded as the
+    ``ring_vs_cp1`` row. Wall-times on CPU host devices only sanity-check
+    that the ring is not pathological; the latency win needs real
+    accelerator DMAs. Also asserts ring == gather == cp1 on the model loss.
+    """
+    out = run_multidevice(_CP_BENCH_SCRIPT, 2, "CP_BENCH_OK", timeout=2400)
+    for line in out.splitlines():
+        if line.startswith("ROW "):
+            name, us, derived = line[4:].split(",", 2)
+            emit(name, float(us), derived)
+
+
+# ---------------------------------------------------------------------------
 # survey §8.3 (checkpointing latency table)
 
 def bench_checkpoint(tmp="/tmp/repro_bench_ckpt"):
@@ -528,6 +673,7 @@ BENCHES = {
     "moe": bench_moe,
     "ssd": bench_ssd,
     "tp": bench_tp,
+    "cp": bench_cp,
     "trainstep": bench_trainstep,
     "ckpt": bench_checkpoint,
     "ft": bench_fault_tolerance,
@@ -642,6 +788,39 @@ print("TP_OK", flush=True)
                 warmup=0, iters=1)
     emit("quick.tp.overlap", us, "mesh=1x2;grads_match_gspmd=True")
 
+    # ring context-parallel smoke: zigzag ring attention + executor loss on a
+    # 2-way cp mesh must reproduce the single-device loss/grads
+    script = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import Family, InputShape, ModelConfig, ParallelPlan
+from repro.data import SyntheticDataset
+from repro.models import build_model
+from repro.train import Hyper, make_loss_fn
+from repro.train.executor import make_executor_loss_fn
+cfg = ModelConfig("q", Family.DENSE, n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128)
+shape = InputShape("q", 16, 4, "train")
+ds = SyntheticDataset(cfg, shape)
+batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+mesh = jax.make_mesh((1, 2), ("data", "cp"))
+plan = ParallelPlan(remat="none", compute_dtype="float32", cp=2,
+                    cp_impl="ring")
+model = build_model(cfg, plan)
+params = model.init(jax.random.PRNGKey(0))
+lf_g = make_loss_fn(model, Hyper(z_loss=1e-4))
+lf_c = make_executor_loss_fn(cfg, plan, mesh, ("data",), z_loss=1e-4)
+lg, gg = jax.jit(jax.value_and_grad(lambda p, b: lf_g(p, b)[0]))(params, batch)
+lc, gc = jax.jit(jax.value_and_grad(lambda p, b: lf_c(p, b)[0]))(params, batch)
+assert abs(float(lg) - float(lc)) < 1e-5, (float(lg), float(lc))
+for a, b in zip(jax.tree.leaves(gg), jax.tree.leaves(gc)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-6)
+print("CP_OK", flush=True)
+"""
+    us = timeit(lambda: run_multidevice(script, 2, "CP_OK", timeout=900),
+                warmup=0, iters=1)
+    emit("quick.cp.ring", us, "mesh=1x2;grads_match_single_device=True")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -663,28 +842,31 @@ def main() -> None:
             fn()
     if args.json:
         import json
-        import os
         recs = []
         for row in ROWS:
             name, us, derived = row.split(",", 2)
             recs.append({"name": name, "us_per_call": float(us),
                          "derived": derived})
         # one-line perf delta vs the previous run of this JSON, so the
-        # trajectory is visible in CI logs before the file is overwritten
-        if os.path.exists(args.json):
-            try:
-                with open(args.json) as f:
-                    prev = {r["name"]: r["us_per_call"] for r in json.load(f)}
-            except (json.JSONDecodeError, KeyError, TypeError):
-                prev = {}
-            deltas = [(r["us_per_call"] - prev[r["name"]]) / prev[r["name"]]
-                      for r in recs if prev.get(r["name"])]
-            if deltas:
-                avg = sum(deltas) / len(deltas) * 100
-                worst = max(deltas) * 100
-                print(f"perf delta vs previous {args.json}: "
-                      f"avg {avg:+.1f}% us_per_call, worst {worst:+.1f}% "
-                      f"({len(deltas)} shared rows)")
+        # trajectory is visible in CI logs before the file is overwritten.
+        # A missing/unreadable/mismatched previous JSON (first run of a new
+        # bench, e.g. BENCH_cp.json) must not error — note it and move on.
+        try:
+            with open(args.json) as f:
+                prev = {r["name"]: r["us_per_call"] for r in json.load(f)}
+        except (OSError, json.JSONDecodeError, KeyError, TypeError):
+            prev = {}
+        deltas = [(r["us_per_call"] - prev[r["name"]]) / prev[r["name"]]
+                  for r in recs if prev.get(r["name"])]
+        if deltas:
+            avg = sum(deltas) / len(deltas) * 100
+            worst = max(deltas) * 100
+            print(f"perf delta vs previous {args.json}: "
+                  f"avg {avg:+.1f}% us_per_call, worst {worst:+.1f}% "
+                  f"({len(deltas)} shared rows)")
+        else:
+            print(f"perf delta vs previous {args.json}: no previous rows "
+                  f"(first run) — skipping")
         with open(args.json, "w") as f:
             json.dump(recs, f, indent=1)
         print(f"wrote {len(recs)} rows to {args.json}")

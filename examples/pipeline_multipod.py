@@ -4,11 +4,13 @@ Builds the (pod=2, data=2, model=2) mesh, pipelines a 4-layer dense model as
 2 stages over the ``pod`` axis under both schedules — GPipe fill-drain and the
 memory-lean 1F1B custom-VJP schedule (``plan.pp_schedule``) — verifies both
 against the non-pipelined loss, compares their compiled peak live memory, and
-trains with the 1F1B schedule. Finally composes TP x PP (survey §4.1.2 x
+trains with the 1F1B schedule. Then composes TP x PP (survey §4.1.2 x
 §4.1.3): ``plan.tp_impl = "overlap"`` runs the collective-matmul ring steps of
 ``train/tensor_parallel.py`` *inside* each 1F1B tick, with sequence-sharded
 (mb, s/tp, d) activations rotating between stages and a vocab-parallel loss
-on the last stage.
+on the last stage. Finally CP x TP x PP (§4.1.4, the long-context recipe):
+``plan.cp`` shards the sequence itself over a "cp" mesh axis and zigzag ring
+attention runs inside each tick, so no device ever holds full-context K/V.
 
     PYTHONPATH=src python examples/pipeline_multipod.py
 """
@@ -94,6 +96,22 @@ def main():
     assert abs(float(tp_loss) - float(base_loss)) < 2e-5
     print(f"TP x PP (1f1b + overlap rings) loss {float(tp_loss):.6f} == "
           f"pp-only loss {float(base_loss):.6f}")
+
+    # CP x TP x PP — the long-context recipe (survey §4.1.4): the sequence
+    # itself is sharded over a "cp" mesh axis end to end, so each device
+    # holds (mb, s/(cp·tp), d) activations between blocks and zigzag ring
+    # attention ppermutes KV chunks *inside* each 1F1B tick — no device ever
+    # materializes full-context K/V or scores. At real long-context sizes
+    # (train/executor.py: plan.cp=8, S=512k) this is what keeps attention
+    # activation memory, the long-S bottleneck, flat per device.
+    cp_mesh = jax.make_mesh((2, 2, 2), ("pod", "cp", "model"))
+    cp_plan = dataclasses.replace(plan, tp=2, tp_impl="overlap",
+                                  cp=2, cp_impl="ring")
+    cp_loss_fn = pipelined_loss_fn(cfg, cp_plan, cp_mesh, ())
+    cp_loss, _ = jax.jit(cp_loss_fn)(params, batch)
+    assert abs(float(cp_loss) - float(base_loss)) < 2e-5
+    print(f"CP x TP x PP (zigzag ring attention in each 1F1B tick) loss "
+          f"{float(cp_loss):.6f} == pp-only loss {float(base_loss):.6f}")
 
 
 if __name__ == "__main__":

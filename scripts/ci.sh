@@ -3,11 +3,15 @@
 # Mirrors ROADMAP.md: PYTHONPATH=src python -m pytest -x -q
 # then smokes every fused Pallas kernel fwd+bwd under pallas_call (interpret
 # mode, one shape per op), the overlap-TP ring path vs gspmd on a 2-way model
-# mesh (quick.tp.overlap), and a selective-remat train step; records the
-# remat-policy peak-memory/step-time trade-off to BENCH_trainstep.json and the
-# gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json
-# (run.py prints a one-line delta vs the previous JSON so the perf trajectory
-# is visible in CI logs).
+# mesh (quick.tp.overlap), the zigzag ring context-parallel path vs the
+# single-device oracle on a 2-way cp mesh (quick.cp.ring), and a
+# selective-remat train step; records the remat-policy peak-memory/step-time
+# trade-off to BENCH_trainstep.json, the gspmd-vs-overlap tokens/sec +
+# bytes-transferred sweep to BENCH_tp.json, and the gather-vs-ring
+# context-parallel sweep (incl. the S=16k attention-block peak-memory
+# assertion) to BENCH_cp.json (run.py prints a one-line delta vs the previous
+# JSON so the perf trajectory is visible in CI logs; a missing previous JSON
+# is reported as a first run, not an error).
 #
 # `-o pipefail` matters: the benchmark steps are tee'd into logs, and without
 # it a crashing benchmark smoke would exit 0 through the pipe and pass
@@ -19,3 +23,4 @@ python -m pytest -x -q "$@"
 python -m benchmarks.run --quick | tee bench_quick.log
 python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee bench_trainstep.log
 python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log
+python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log

@@ -7,13 +7,23 @@ Persistent checkpoints follow the snapshot/persist split of §8.3.1:
   (snapshot-stall checkpointing à la Check-N-Run/MegaScale).
 
 Layout: one ``.npz`` per checkpoint plus a JSON manifest carrying the step,
-the flattened tree structure and integrity checksums. ``save_sharded`` writes
-one shard per data-parallel writer rank to emulate the distributed-filesystem
-layout (survey §3.3.1: a designated worker per DP group writes its shard).
+the flattened tree structure and integrity checksums.
+
+Shard-aware (survey §3.3.1: a designated worker per group writes its shard):
+the snapshot phase walks ``jax.Array.addressable_shards`` and copies each
+*unique* device shard to host instead of gathering the full array — under
+cp/tp/ZeRO meshes the device→host copy moves 1/shards of the bytes and the
+replicated copy never materializes. The manifest records each shard's index
+slices plus the :class:`repro.core.config.ParallelPlan` axes
+(``tp``/``cp``/``pp``/``dp_shard``/``zero_stage``/impl knobs) and mesh axis
+sizes, so ``ft/recovery.py`` can refuse to replay a checkpoint onto an
+incompatible layout. ``restore`` reassembles full arrays from the shard
+slices and re-places them with each target leaf's sharding.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import threading
@@ -23,6 +33,60 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+# the ParallelPlan fields recorded in the manifest (impl/schedule knobs ride
+# along for forensics) ...
+PLAN_AXES = ("tp", "tp_impl", "cp", "cp_impl", "dp_shard", "zero_stage",
+             "ep", "pp", "pp_schedule")
+# ... and the subset check_plan actually compares: only the axes that change
+# how saved state maps onto devices. A pure schedule/impl change
+# (gpipe→1f1b, gather→ring) is replay-safe — restore reassembles full
+# arrays and re-places them — so it must not be refused.
+PLAN_LAYOUT_AXES = ("tp", "cp", "dp_shard", "zero_stage", "ep", "pp")
+
+
+def _plan_meta(plan) -> Optional[Dict[str, Any]]:
+    if plan is None:
+        return None
+    d = dataclasses.asdict(plan)
+    return {k: d[k] for k in PLAN_AXES if k in d}
+
+
+def _index_json(index: Tuple[slice, ...], shape) -> List[List[int]]:
+    """A shard's global-index slices as JSON: [[start, stop], ...]."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        out.append([start, stop])
+    return out
+
+
+def _leaf_shards(x) -> List[Tuple[List[List[int]], np.ndarray]]:
+    """Unique (index, host copy) pairs for one leaf.
+
+    jax.Arrays snapshot per addressable shard (replicas deduped by index);
+    anything else (numpy, python scalars) is a single whole-array shard.
+    """
+    if isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer):
+        if not x.is_fully_addressable:
+            # multi-process meshes: this process sees only its own shards;
+            # recording a partial shard list and zero-filling the rest at
+            # restore would be silent corruption — fail loudly (the
+            # multi-host per-writer layout is future work)
+            raise ValueError(
+                "sharded checkpoint save requires fully-addressable arrays; "
+                "multi-process meshes need a per-host writer rank")
+        seen: Dict[Tuple, Tuple[List[List[int]], np.ndarray]] = {}
+        for sh in x.addressable_shards:
+            idx = _index_json(tuple(sh.index), x.shape)
+            key = tuple(map(tuple, idx))
+            if key not in seen:
+                seen[key] = (idx, np.asarray(sh.data))
+        return list(seen.values())
+    arr = np.asarray(x)
+    return [(_index_json(tuple(slice(0, d) for d in arr.shape), arr.shape),
+             arr)]
 
 
 def _flatten_with_names(tree: Any) -> List[Tuple[str, Any]]:
@@ -53,25 +117,48 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, blocking: bool = False) -> Path:
-        """Snapshot (stalls) then persist (async unless blocking)."""
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             plan=None, mesh=None) -> Path:
+        """Snapshot (stalls) then persist (async unless blocking).
+
+        The snapshot copies each leaf's unique *addressable shards* to host
+        (no full-array gather); ``plan``/``mesh`` record the layout axes in
+        the manifest so replay can verify compatibility.
+        """
         t0 = time.time()
         named = _flatten_with_names(tree)
-        host = [(n, np.asarray(x)) for n, x in named]     # snapshot phase
+        # snapshot phase: per-device shards, replicas deduped by index
+        host = [(n, tuple(np.shape(x)),
+                 str(getattr(x, "dtype", np.asarray(x).dtype)),
+                 _leaf_shards(x)) for n, x in named]
         self.snapshot_seconds = time.time() - t0
 
         path = self.dir / f"ckpt_{step:08d}"
+        mesh_axes = dict(mesh.shape) if mesh is not None else None
 
         def _persist():
             t1 = time.time()
-            arrays = {f"a{i}": a for i, (_, a) in enumerate(host)}
+            arrays = {}
+            shard_meta = []
+            for i, (_, _, _, shards) in enumerate(host):
+                keys = []
+                for j, (idx, a) in enumerate(shards):
+                    # single-shard leaves keep the legacy "a{i}" key
+                    key = f"a{i}" if len(shards) == 1 else f"a{i}_s{j}"
+                    arrays[key] = a
+                    keys.append({"key": key, "index": idx,
+                                 "checksum": _checksum(a)})
+                shard_meta.append(keys)
             np.savez(str(path) + ".npz", **arrays)
             manifest = {
                 "step": step,
-                "names": [n for n, _ in host],
-                "checksums": [_checksum(a) for _, a in host],
-                "dtypes": [str(a.dtype) for _, a in host],
-                "shapes": [list(a.shape) for _, a in host],
+                "names": [n for n, _, _, _ in host],
+                "checksums": [m[0]["checksum"] for m in shard_meta],
+                "dtypes": [d for _, _, d, _ in host],
+                "shapes": [list(s) for _, s, _, _ in host],
+                "shards": shard_meta,
+                "plan": _plan_meta(plan),
+                "mesh_axes": mesh_axes,
                 "time": time.time(),
             }
             (path.with_suffix(".json")).write_text(json.dumps(manifest))
@@ -106,9 +193,39 @@ class CheckpointManager:
             return None
         return json.loads(ckpts[-1].read_text())["step"]
 
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The JSON manifest of a checkpoint (layout metadata included)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"ckpt_{step:08d}"
+        return json.loads(path.with_suffix(".json").read_text())
+
+    def check_plan(self, plan, step: Optional[int] = None) -> None:
+        """Raise ValueError if the checkpoint's recorded ParallelPlan axes
+        disagree with ``plan`` — replaying onto a different cp/tp/pp layout
+        silently reshards, which is exactly the failure mode ft/recovery
+        must refuse."""
+        recorded = self.manifest(step).get("plan")
+        if recorded is None or plan is None:
+            return
+        want = _plan_meta(plan)
+        diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
+                 if k in recorded and k in want and recorded[k] != want[k]}
+        if diffs:
+            raise ValueError(
+                f"checkpoint layout mismatch (recorded != requested): {diffs}")
+
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 verify: bool = True) -> Tuple[int, Any]:
-        """Restore into the structure of ``tree_like``; returns (step, tree)."""
+        """Restore into the structure of ``tree_like``; returns (step, tree).
+
+        Shards are reassembled by their recorded index slices; leaves whose
+        ``tree_like`` twin carries a sharding are re-placed with it
+        (device_put), so a cp/tp-sharded state restores shard-to-shard.
+        """
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -117,15 +234,37 @@ class CheckpointManager:
         path = self.dir / f"ckpt_{step:08d}"
         manifest = json.loads(path.with_suffix(".json").read_text())
         data = np.load(str(path) + ".npz")
-        arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
-        if verify:
-            for a, c, n in zip(arrays, manifest["checksums"], manifest["names"]):
-                if _checksum(a) != c:
-                    raise IOError(f"checksum mismatch for {n} in {path}")
+        shard_meta = manifest.get("shards")
+        if shard_meta is None:                # legacy single-array layout
+            shard_meta = [[{"key": f"a{i}", "index": None, "checksum": c}]
+                          for i, c in enumerate(manifest["checksums"])]
+        arrays = []
+        for i, (metas, shape, dt, n) in enumerate(zip(
+                shard_meta, manifest["shapes"], manifest["dtypes"],
+                manifest["names"])):
+            if verify:
+                for m in metas:
+                    if _checksum(data[m["key"]]) != m["checksum"]:
+                        raise IOError(f"checksum mismatch for {n} in {path}")
+            if len(metas) == 1:
+                # one unique shard ⇒ it covers the whole array (a valid
+                # sharding's shards union to the full index space)
+                arrays.append(data[metas[0]["key"]])
+                continue
+            full = np.zeros(shape, dtype=np.dtype(dt))
+            for m in metas:
+                sl = tuple(slice(a, b) for a, b in m["index"])
+                full[sl] = data[m["key"]]
+            arrays.append(full)
         named = _flatten_with_names(tree_like)
         assert [n for n, _ in named] == manifest["names"], \
             "checkpoint tree structure mismatch"
-        leaves = [jax.numpy.asarray(a, dtype=l.dtype)
-                  for a, (_, l) in zip(arrays, named)]
+        leaves = []
+        for a, (_, l) in zip(arrays, named):
+            arr = jax.numpy.asarray(a, dtype=l.dtype)
+            sharding = getattr(l, "sharding", None)
+            if sharding is not None and isinstance(l, jax.Array):
+                arr = jax.device_put(arr, sharding)
+            leaves.append(arr)
         treedef = jax.tree_util.tree_structure(tree_like)
         return step, jax.tree_util.tree_unflatten(treedef, leaves)

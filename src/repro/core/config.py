@@ -5,8 +5,9 @@ Two layers of configuration:
 - :class:`ModelConfig` — architecture hyperparameters (one instance per assigned
   architecture lives in ``repro/configs/<arch>.py``).
 - :class:`ParallelPlan` — how the model is laid out on the mesh, following the
-  survey's taxonomy (§4.1): DP sharding factor, tensor parallelism, expert
-  parallelism, optimizer-state (ZeRO-1) sharding, pipeline stages, remat policy.
+  survey's taxonomy (§4.1): DP sharding factor, tensor parallelism, context
+  (sequence) parallelism, expert parallelism, optimizer-state (ZeRO-1)
+  sharding, pipeline stages, remat policy.
 
 Everything is a frozen dataclass so configs hash and can key jit caches.
 """
@@ -14,6 +15,7 @@ Everything is a frozen dataclass so configs hash and can key jit caches.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 
@@ -168,6 +170,23 @@ class ModelConfig:
         return dense_like - inactive
 
 
+def warn_shard_local_routing(cfg: "ModelConfig") -> None:
+    """Warn when shard-local MoE routing can drop tokens differently from
+    the global-routing GSPMD baseline (the one documented divergence of the
+    overlap-TP / cp paths). No-op for non-MoE or no-drop capacity."""
+    if cfg.moe is None:
+        return
+    if cfg.moe.capacity_factor * cfg.moe.top_k >= cfg.moe.num_experts:
+        return
+    warnings.warn(
+        "token-dropping capacity under shard-local MoE routing "
+        f"(capacity_factor={cfg.moe.capacity_factor} < "
+        f"E/top_k={cfg.moe.num_experts / cfg.moe.top_k:g}): drop decisions "
+        "are per data/context shard and may diverge from the global-routing "
+        "GSPMD baseline; use capacity_factor >= E/top_k for exact "
+        "equivalence", UserWarning, stacklevel=3)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelPlan:
     """Distribution strategy per survey §4.
@@ -193,6 +212,33 @@ class ParallelPlan:
                                    # overlap on TPU (where the async ppermutes
                                    # actually hide the transfer), gspmd
                                    # elsewhere.
+    cp: int = 1                    # context-parallel degree (survey §4.1.4):
+                                   # shard the *sequence* dim over a dedicated
+                                   # "cp" mesh axis, end to end — the residual
+                                   # stream between blocks is
+                                   # (batch, seq/(cp·tp), d) and no device
+                                   # ever holds the full context. The block
+                                   # executor (train/executor.py) owns the
+                                   # wiring: attention runs ring or gathered
+                                   # KV (``cp_impl``), the Mamba2 SSD scan
+                                   # passes per-chunk entering states around
+                                   # the cp ring, MoE routes on local
+                                   # sequence shards with batch-global aux.
+    cp_impl: str = "auto"          # "auto" | "gather" | "ring": how cp
+                                   # attention executes. "gather" all-gathers
+                                   # K/V over the cp axis (contiguous chunks,
+                                   # O(S) KV per device, exact). "ring" keeps
+                                   # KV sharded and ppermutes chunks around
+                                   # the ring with zigzag causal load
+                                   # balancing — the flash kernel runs as the
+                                   # inner tile and per-chunk (out, lse)
+                                   # partials merge exactly (chunked
+                                   # softmax), so attention activation
+                                   # memory scales with S/cp. "auto" =
+                                   # ring when statically eligible (full
+                                   # causal attention), gather otherwise;
+                                   # resolved by
+                                   # repro.kernels.dispatch.select_cp_impl.
     dp_shard: int = 1              # param sharding factor F over data axis (§4.1.1)
     zero_stage: int = 1            # 0: replicated opt state, 1: shard over data axis
     ep: bool = False               # expert parallelism (all-to-all) for MoE layers
@@ -274,6 +320,37 @@ class ParallelPlan:
         if self.pp_schedule not in ("gpipe", "1f1b"):
             raise ValueError(
                 f"pp_schedule must be gpipe|1f1b, got {self.pp_schedule!r}")
+        if self.cp_impl not in ("auto", "gather", "ring"):
+            raise ValueError(
+                f"cp_impl must be auto|gather|ring, got {self.cp_impl!r}")
+        if self.cp < 1:
+            raise ValueError(f"cp must be >= 1, got {self.cp}")
+        if self.cp > 1:
+            if cfg.family not in (Family.DENSE, Family.MOE, Family.SSM):
+                raise ValueError(
+                    f"cp > 1 supports dense/moe/ssm decoder-only families "
+                    f"(the block-executor wiring), got {cfg.family!r}")
+            if self.tp > 1 and self.tp_impl == "gspmd":
+                raise ValueError(
+                    "cp > 1 composes with tp via the executor's explicit "
+                    "shard_map rings; set tp_impl='overlap' (or 'auto')")
+            if self.dp_over_model:
+                raise ValueError("cp > 1 is incompatible with dp_over_model")
+            if self.ep:
+                raise ValueError(
+                    "cp > 1 does not compose with expert parallelism yet: "
+                    "the executor shard_map routes experts dense/d_expert-"
+                    "sharded, so the EP all-to-all the knob selects would "
+                    "silently vanish")
+        # Documented divergence (PR 4 / cp): with shard-local routing, GShard
+        # token-dropping decisions are made per data/context shard while the
+        # GSPMD baseline routes globally — same math only when no tokens
+        # drop. Flag it loudly instead of silently differing; equivalence
+        # tests force no-drop capacity (capacity_factor >= E / top_k).
+        # (validate() only sees *explicit* knobs; the executor re-checks
+        # against the resolved placement, catching tp_impl="auto"→overlap.)
+        if self.cp > 1 or self.tp_impl == "overlap":
+            warn_shard_local_routing(cfg)
         if self.ep and cfg.family != Family.MOE:
             raise ValueError(f"expert parallelism requires a MoE arch, got {cfg.family}")
         if self.ep and self.dp_over_model:

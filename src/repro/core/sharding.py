@@ -210,8 +210,8 @@ def overlap_spec_for_param(path_names: Tuple[str, ...],
     - the embedding is always vocab-sharded: the ring path does the Megatron
       masked-lookup + psum, so no hidden-dim fallback exists;
     - small SSM per-head/per-channel leaves (A_log, D, dt_bias, conv_*,
-      scale) stay replicated — ``ssm_block_tp`` slices each rank's
-      head/channel chunk explicitly.
+      scale) stay replicated — the executor's ``ssm_block_ex``
+      (train/executor.py) slices each rank's head/channel chunk explicitly.
     """
     name = path_names[-1]
     spec: list = [None] * len(shape)
@@ -264,6 +264,18 @@ def seq_activation_spec(mesh: Mesh, plan: ParallelPlan) -> P:
     """(batch, seq/tp, d_model) sequence-sharded residual stream — the
     between-blocks layout of the overlap-TP path (Megatron-SP, §4.1.4)."""
     return P(batch_axes(mesh, plan), "model", None)
+
+
+def cp_activation_spec(mesh: Mesh, plan: ParallelPlan) -> P:
+    """(batch, seq/(cp·tp), d_model) residual stream under context
+    parallelism (``plan.cp > 1``, survey §4.1.4): the sequence dim carries
+    the "cp" axis end to end — and composes with the overlap-TP "model"
+    sharding when both are on — so no device ever holds the full context.
+    The block executor (train/executor.py) owns the in-block placement
+    (ring/gathered attention, SSD state chain, shard-local MoE routing)."""
+    seq_axes = ("cp", "model") if (plan.tp > 1 and "model" in mesh.shape) \
+        else "cp"
+    return P(batch_axes(mesh, plan), seq_axes, None)
 
 
 def kv_cache_spec(mesh: Mesh, plan: ParallelPlan, seq_sharded: bool = True) -> P:

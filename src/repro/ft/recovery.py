@@ -34,16 +34,24 @@ def run_with_recovery(
     ckpt_every: int = 10,
     max_restores: int = 3,
     fault_injector: Optional[Callable[[int, Any], Any]] = None,
+    plan=None,
+    mesh=None,
 ) -> Tuple[Any, RunReport]:
     """Run ``n_steps`` with periodic checkpointing and anomaly-driven rollback.
 
     ``fault_injector(step, state) -> state`` lets tests corrupt the run.
+    ``plan``/``mesh`` stamp the ParallelPlan axes into every checkpoint's
+    manifest (store.py records them), and each rollback first verifies the
+    checkpoint was written under the *same* cp/tp/pp layout — replaying a
+    shard-written checkpoint onto a different mesh silently reshards, so the
+    driver refuses instead. Restore itself is shard-aware: the restored
+    leaves are re-placed with the live state's shardings.
     """
     monitor = monitor or Monitor()
     losses: List[float] = []
     restores = 0
     step = 0
-    ckpt.save(step, state, blocking=True)
+    ckpt.save(step, state, blocking=True, plan=plan, mesh=mesh)
 
     while step < n_steps:
         cur = state
@@ -58,6 +66,8 @@ def run_with_recovery(
             if restores >= max_restores:
                 raise RuntimeError(
                     f"giving up after {restores} restores: {anomaly}")
+            if plan is not None:
+                ckpt.check_plan(plan)          # refuse cross-layout replay
             restore_step, state = ckpt.restore(state)
             step = restore_step
             restores += 1
@@ -68,7 +78,7 @@ def run_with_recovery(
         losses.append(loss)
         step += 1
         if step % ckpt_every == 0:
-            ckpt.save(step, state)
+            ckpt.save(step, state, plan=plan, mesh=mesh)
 
     ckpt.wait()
     return state, RunReport(step, monitor.anomalies, restores, losses)

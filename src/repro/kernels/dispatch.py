@@ -24,6 +24,12 @@ attention, (B, L, H, P) for SSD); the kernels use head-major. The dispatchers
 own the transposes, plus the boundary padding for unaligned lengths (KV to the
 block boundary for blockwise attention, the sequence to the chunk boundary for
 SSD — never a silent fall-back to a quadratic whole-sequence path).
+
+Ring context parallelism (``train/executor.py``) gets two extra attention
+entries: :func:`dispatch_attention_lse` (per-chunk forward that also returns
+the logsumexp — the lse-merging chunked-softmax tile) and
+:func:`dispatch_attention_chunk_bwd` (per-chunk backward against the globally
+merged (lse, Δ)); :func:`select_cp_impl` resolves ``ParallelPlan.cp_impl``.
 """
 
 from __future__ import annotations
@@ -35,7 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as _layers
-from .flash_attention import _pad_seq, flash_attention, resolve_interpret
+from .flash_attention import (_pad_seq, flash_attention, flash_attention_bwd,
+                              flash_attention_lse, resolve_interpret)
 from .grouped_gemm import expert_gemm
 from .ssd_scan import ssd_chunk_scan
 
@@ -110,6 +117,117 @@ def dispatch_tp_matmul(x, w, *, impl: str = "auto"):
     """
     del impl  # reserved for a fused tile-GEMM kernel
     return jnp.matmul(x, w)
+
+
+CP_IMPLS = ("auto", "gather", "ring")
+
+
+def select_cp_impl(impl: str, *, family: str = "dense", window: int = 0,
+                   local_global_alternating: bool = False) -> str:
+    """Resolve ``ParallelPlan.cp_impl`` (survey §4.1.4, long-context training).
+
+    ``"gather"`` all-gathers K/V over the ``cp`` axis (contiguous sequence
+    chunks, Megatron-SP-style): every rank holds the full KV but only its
+    query chunk — exact, simple, O(S) KV memory per device. ``"ring"`` keeps
+    KV sharded too and ``ppermute``s chunks around the cp ring with zigzag
+    causal load balancing — no device ever holds the full context, the
+    long-context regime ring attention exists for. ``"auto"`` picks ring
+    whenever its static preconditions hold:
+
+    - full causal attention only (sliding windows / gemma2 local-global
+      alternation make the ring's static per-pair mask cases traced — gather
+      handles them);
+    - the SSM family always resolves to ``"ring"``: its cp execution is the
+      per-chunk entering-state chain (there is no KV to gather), and the
+      zigzag remark doesn't apply (SSD per-position work is uniform, so the
+      layout stays contiguous).
+    """
+    if impl not in CP_IMPLS:
+        raise ValueError(f"cp_impl must be one of {CP_IMPLS}, got {impl!r}")
+    from repro.core.config import Family  # noqa: PLC0415 (import cycle)
+    if family == Family.SSM:
+        return "ring"
+    ring_ok = not window and not local_global_alternating
+    if impl == "ring" and not ring_ok:
+        raise ValueError(
+            "cp_impl='ring' needs full causal attention (no sliding window / "
+            "local-global alternation); use cp_impl='gather'")
+    if impl == "auto":
+        return "ring" if ring_ok else "gather"
+    return impl
+
+
+def dispatch_attention_lse(q, k, v, *, impl: str = "auto", causal: bool = True,
+                           window=0, softcap: float = 0.0, q_offset=0,
+                           block_size: int = 1024,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: Optional[bool] = None):
+    """Chunk attention that also returns the merged-softmax statistic.
+
+    Batch-major twin of the plain dispatcher: q (B, S, Hq, hd), k/v
+    (B, T, Hkv, hd) -> (o (B, S, Hq, hd), lse (B, S, Hq) fp32). This is the
+    inner tile of ring context parallelism — per-chunk (o, lse) pairs merge
+    exactly across the cp ring (see ``train/executor.py``).
+    """
+    choice = select_impl(impl, head_dim=q.shape[-1], window=window,
+                         q_offset=q_offset)
+    if choice == "pallas":
+        o, lse = flash_attention_lse(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=int(window),
+            softcap=softcap, scale=scale, q_offset=int(q_offset),
+            block_q=block_q, block_k=block_k,
+            interpret=resolve_interpret(interpret))
+        return o.transpose(0, 2, 1, 3), lse.transpose(0, 2, 1)
+    t = k.shape[1]
+    if t <= 2 * block_size:
+        return _layers.attention_direct_lse(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale)
+    if t % block_size:
+        t_pad = -(-t // block_size) * block_size
+        return _layers.attention_blockwise(
+            q, _pad_seq(k, 1, t_pad), _pad_seq(v, 1, t_pad), causal=causal,
+            window=window, softcap=softcap, q_offset=q_offset,
+            block_size=block_size, scale=scale, kv_len=t, return_lse=True)
+    return _layers.attention_blockwise(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_size=block_size, scale=scale,
+        return_lse=True)
+
+
+def dispatch_attention_chunk_bwd(q, k, v, do, lse, delta, *,
+                                 impl: str = "auto", causal: bool = True,
+                                 softcap: float = 0.0, q_offset=0,
+                                 scale: Optional[float] = None,
+                                 block_q: int = 128, block_k: int = 128,
+                                 interpret: Optional[bool] = None):
+    """One KV chunk's (dq, dk, dv) against the globally merged (lse, delta).
+
+    Batch-major: q/do (B, S, Hq, hd), k/v (B, T, Hkv, hd), lse/delta
+    (B, S, Hq). Routes to the FlashAttention-2 backward kernels
+    (:func:`repro.kernels.flash_attention.flash_attention_bwd`) or the XLA
+    twin (:func:`repro.models.layers.attention_chunk_grads`).
+    """
+    choice = select_impl(impl, head_dim=q.shape[-1], window=0,
+                         q_offset=q_offset)
+    if choice == "pallas":
+        hd = q.shape[-1]
+        dq, dk, dv = flash_attention_bwd(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), do.transpose(0, 2, 1, 3).astype(
+                jnp.float32),
+            lse.transpose(0, 2, 1), delta.transpose(0, 2, 1),
+            causal=causal, window=0, softcap=softcap,
+            scale=float(scale) if scale is not None else hd ** -0.5,
+            q_offset=int(q_offset), block_q=block_q, block_k=block_k,
+            interpret=resolve_interpret(interpret))
+        return (dq.transpose(0, 2, 1, 3), dk.transpose(0, 2, 1, 3),
+                dv.transpose(0, 2, 1, 3))
+    return _layers.attention_chunk_grads(
+        q, k, v, do, lse, delta, causal=causal, window=0, softcap=softcap,
+        q_offset=q_offset, scale=scale)
 
 
 def select_gemm_impl(impl: str) -> str:

@@ -322,12 +322,32 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 def _flash_backward(causal, window, softcap, scale, q_offset, block_q,
                     block_k, interpret, res, g):
     q, k, v, o, lse = res
+    do = g.astype(jnp.float32)
+    delta = jnp.sum(do * o.astype(jnp.float32), axis=-1)      # (B, Hq, S)
+    return flash_attention_bwd(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        softcap=softcap, scale=scale, q_offset=q_offset, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+
+
+def flash_attention_bwd(q, k, v, do, lse, delta, *, causal, window, softcap,
+                        scale, q_offset, block_q, block_k, interpret):
+    """Backward kernels against an externally supplied softmax statistic.
+
+    This is the lse-merging chunk entry of the backward: ``lse``/``delta`` may
+    come from a *larger* softmax than (k, v) — ring context parallelism passes
+    the globally merged logsumexp and Δ = rowsum(dO ∘ O_global) while (k, v)
+    is one ring chunk, and the emitted (dq, dk, dv) are exactly that chunk's
+    contribution to the global attention gradient. ``_flash_backward`` (the
+    single-device custom-VJP rule) is the degenerate one-chunk case.
+
+    Layouts are head-major: q/do (B, Hq, S, hd); k/v (B, Hkv, T, hd);
+    lse/delta (B, Hq, S) fp32. Returns (dq, dk, dv) with dk/dv group-summed
+    back onto the shared KV heads.
+    """
     b, hq, s, hd = q.shape
     hkv, t = k.shape[1], k.shape[2]
     group = hq // hkv
-
-    do = g.astype(jnp.float32)
-    delta = jnp.sum(do * o.astype(jnp.float32), axis=-1)      # (B, Hq, S)
 
     block_q = min(block_q, s)
     block_k = min(block_k, t)
@@ -440,3 +460,35 @@ def flash_attention(
     return _flash(q, k, v, bool(causal), int(window), float(softcap), scale,
                   int(q_offset), int(block_q), int(block_k),
                   resolve_interpret(interpret))
+
+
+def flash_attention_lse(
+    q: jax.Array,                 # (B, Hq, S, hd)
+    k: jax.Array,                 # (B, Hkv, T, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Forward kernel that also returns the per-row logsumexp.
+
+    The lse-merging entry for chunked softmax (ring context parallelism,
+    survey §4.1.4): partial attention over one KV chunk returns
+    ``(o_c, lse_c)`` and chunks merge exactly via
+    ``lse = log Σ_c exp(lse_c)``, ``o = Σ_c exp(lse_c - lse) · o_c``.
+    Fully-masked rows report ``lse ≈ NEG_INF`` (finite), so they drop out of
+    the merge without producing NaNs. Not differentiable — ring attention owns
+    the custom VJP and calls :func:`flash_attention_bwd` per chunk with the
+    *merged* statistics. Returns (o (B, Hq, S, hd), lse (B, Hq, S) fp32).
+    """
+    hd = q.shape[-1]
+    scale = float(scale) if scale is not None else hd ** -0.5
+    return _flash_forward(q, k, v, bool(causal), int(window), float(softcap),
+                          scale, int(q_offset), int(block_q), int(block_k),
+                          resolve_interpret(interpret))

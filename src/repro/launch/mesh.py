@@ -6,7 +6,11 @@ Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model").
 
 Axis semantics (DESIGN.md §3): ``model`` is the innermost/highest-locality axis
 (TP/EP/sequence), ``data`` is DP/FSDP, ``pod`` crosses the inter-pod DCN and
-carries either DP (default) or pipeline stages.
+carries either DP (default) or pipeline stages. ``cp`` (context parallelism,
+survey §4.1.4) splits off the data axis when requested: it carves the
+*sequence* dimension, so it wants locality between ``data`` and ``model`` —
+ring-attention ppermutes are nearest-neighbour transfers, heavier than DP's
+once-per-step grad reduction but lighter than TP's per-GEMM rings.
 """
 
 from __future__ import annotations
@@ -16,7 +20,16 @@ from typing import Tuple
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, cp: int = 1):
+    """``cp > 1`` splits the data axis into (data/cp, cp): same chip count,
+    sequence sharded over the new "cp" axis (``ParallelPlan.cp``)."""
+    if cp > 1:
+        if 16 % cp:
+            raise ValueError(f"cp={cp} must divide the 16-wide data axis")
+        shape = (2, 16 // cp, cp, 16) if multi_pod else (16 // cp, cp, 16)
+        axes = (("pod", "data", "cp", "model") if multi_pod
+                else ("data", "cp", "model"))
+        return jax.make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)

@@ -200,43 +200,20 @@ def _init_decoder_layer(cfg: ModelConfig):
 
 def _decoder_layer_fwd(cfg: ModelConfig, dtype, mesh, plan, batch_axes,
                        collect_kv: bool = False):
-    use_rope = cfg.pos_emb == "rope"
+    """The dense/MoE decoder layer body — one wiring for every placement.
+
+    Routes through the unified block executor (``repro.train.executor``)
+    with a *local* ParallelContext: identity collectives, the GSPMD
+    seq-shard/residual constrainers as placement hooks. The overlap-TP and
+    context-parallel paths build the same layer with ring contexts instead
+    — the family math is defined once, the executor decides placement.
+    """
+    from repro.train import executor as exlib  # noqa: PLC0415 (import cycle)
     cq, ckv = _seq_constrainers(plan, mesh, batch_axes)
     cx = _residual_constrainer(mesh, batch_axes)
-    impl = plan.attn_impl if plan is not None else "auto"
-    # unless layers alternate local/global, every layer shares one static
-    # window — use it instead of the scanned (traced) metadata so the Pallas
-    # kernel (compile-time masks) stays eligible
-    alternating = bool(cfg.local_global_alternating and cfg.sliding_window)
-
-    def layer(x, lp, window, positions):
-        x = cx(x)
-        h = rms_norm(x, lp["norm1"]["scale"], cfg.rms_eps)
-        q, k, v = qkv_proj(lp["attn"], h, cfg, dtype)
-        if use_rope:
-            q = rope(q, positions, cfg.rope_theta)
-            k = rope(k, positions, cfg.rope_theta)
-        q, k, v = cq(q), ckv(k), ckv(v)
-        a = attention(q, k, v, causal=True,
-                      window=window if alternating else cfg.sliding_window,
-                      softcap=cfg.attn_logit_softcap, impl=impl)
-        a = cq(a)
-        a = a.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"].astype(dtype)
-        a = checkpoint_name(a, "attn_out")
-        if cfg.post_norm:
-            a = rms_norm(a, lp["norm1_post"]["scale"], cfg.rms_eps)
-        x = x + a
-        h = rms_norm(x, lp["norm2"]["scale"], cfg.rms_eps)
-        if cfg.family == Family.MOE:
-            m, aux = moe_lib.moe_block(lp["moe"], h, cfg, dtype, mesh, plan, batch_axes)
-        else:
-            m, aux = mlp_block(lp["mlp"], h, dtype), jnp.float32(0.0)
-        if cfg.post_norm:
-            m = rms_norm(m, lp["norm2_post"]["scale"], cfg.rms_eps)
-        if collect_kv:
-            return x + m, aux, (k, v)
-        return x + m, aux
-    return layer
+    ctx = exlib.local_context(mesh=mesh, batch_axes=tuple(batch_axes or ()),
+                              cx=cx, cq=cq, ckv=ckv)
+    return exlib.decoder_layer(ctx, cfg, plan, dtype, collect_kv=collect_kv)
 
 
 def build_decoder_only(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
@@ -399,15 +376,17 @@ def build_ssm(cfg: ModelConfig, plan: Optional[ParallelPlan] = None,
         return params
 
     def forward(params, batch):
+        from repro.train import executor as exlib  # noqa: PLC0415
         tokens = batch["tokens"]
         x = _embed(params, tokens, cfg, dtype)
+        layer = exlib.ssm_layer(
+            exlib.local_context(mesh=mesh,
+                                batch_axes=tuple(batch_axes or ()), cx=cx),
+            cfg, plan, dtype)
 
         def body(carry, lp):
-            xc = cx(carry)
-            h = rms_norm(xc, lp["norm1"]["scale"], cfg.rms_eps)
-            y = ssm_lib.ssm_block(lp["ssm"], h, cfg, dtype, plan=plan)
-            y = checkpoint_name(y, "block_out")
-            return xc + y, None
+            xn, _ = layer(carry, lp, None, None)
+            return xn, None
 
         body = _remat(body, plan.remat)
         x, _ = jax.lax.scan(body, x, params["layers"])

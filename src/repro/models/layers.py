@@ -127,13 +127,91 @@ def attention_direct(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
     return out.reshape(b, s, hq, hd)
 
 
+def attention_direct_lse(q, k, v, *, causal=True, window=0, softcap=0.0,
+                         q_offset=0, scale: Optional[float] = None):
+    """:func:`attention_direct` twin that also returns the per-row logsumexp.
+
+    The XLA oracle of the lse-merging chunk entry (ring context parallelism):
+    returns (out (B,S,Hq,hd), lse (B,S,Hq) fp32). Fully-masked rows report a
+    finite ``lse ≈ NEG_INF`` so they drop out of the cross-chunk merge.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    g = hq // hkv
+    qg = _group_q(q, hkv)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    q_pos = q_offset + jnp.arange(s)
+    mask = attn_mask(q_pos, jnp.arange(t), causal=causal, window=window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    m = scores.max(axis=-1)                                  # (b, kv, g, s)
+    p = jnp.exp(scores - m[..., None]) * mask[None, None, None]
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return (out.reshape(b, s, hq, hd).astype(q.dtype),
+            lse.transpose(0, 3, 1, 2).reshape(b, s, hq))
+
+
+def attention_chunk_grads(q, k, v, do, lse, delta, *, causal=True, window=0,
+                          softcap=0.0, q_offset=0,
+                          scale: Optional[float] = None):
+    """One KV chunk's (dq, dk, dv) against externally merged softmax stats.
+
+    XLA twin of :func:`repro.kernels.flash_attention.flash_attention_bwd`:
+    ``lse``/``delta`` (B, S, Hq) come from the *merged* softmax (ring context
+    parallelism merges them across KV chunks), so
+    ``p = exp(s - lse)`` is each pair's share of the global attention and the
+    returned gradients are exactly this chunk's contribution. All math fp32.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    g = hq // hkv
+    qg = _group_q(q, hkv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dog = _group_q(do, hkv).astype(jnp.float32)
+    s_raw = jnp.einsum("bskgd,btkd->bkgst", qg, kf,
+                       preferred_element_type=jnp.float32) * scale
+    if isinstance(softcap, (int, float)) and softcap:
+        th = jnp.tanh(s_raw / softcap)
+        s_c = softcap * th
+    else:
+        th = None
+        s_c = s_raw
+    mask = attn_mask(q_offset + jnp.arange(s), jnp.arange(t), causal=causal,
+                     window=window)[None, None, None]
+    lse_g = lse.reshape(b, s, hkv, g).transpose(0, 2, 3, 1)   # (b, kv, g, s)
+    delta_g = delta.reshape(b, s, hkv, g).transpose(0, 2, 3, 1)
+    # where() before exp: fully-masked rows carry lse ≈ NEG_INF and the
+    # subtraction would overflow before the mask zeros it
+    p = jnp.exp(jnp.where(mask, s_c - lse_g[..., None], NEG_INF))
+    dp = jnp.einsum("bskgd,btkd->bkgst", dog, vf,
+                    preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_g[..., None])
+    if th is not None:
+        ds = ds * (1.0 - th * th)
+    dq = (jnp.einsum("bkgst,btkd->bskgd", ds, kf) * scale).reshape(
+        b, s, hq, hd)
+    dk = jnp.einsum("bkgst,bskgd->btkd", ds, qg) * scale
+    dv = jnp.einsum("bkgst,bskgd->btkd", p, dog)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
 def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
                         block_size=1024, scale: Optional[float] = None,
-                        kv_len: Optional[int] = None):
+                        kv_len: Optional[int] = None, return_lse: bool = False):
     """Online-softmax scan over KV blocks; exact, O(S·block) live memory.
 
     ``kv_len`` masks keys at positions >= kv_len — callers pad unaligned KV to
     the block boundary (see repro.kernels.dispatch) and pass the true length.
+    ``return_lse`` additionally returns the per-row logsumexp (B, S, Hq) — the
+    streaming twin of :func:`attention_direct_lse` for long ring-cp chunks.
     """
     b, s, hq, hd = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -173,7 +251,11 @@ def attention_blockwise(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset
     (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
                                 (jnp.arange(nb), kb, vb))
     out = o / jnp.maximum(l[..., None], 1e-30)
-    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hd).astype(q.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hd).astype(q.dtype)
+    if return_lse:
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))              # (b, kv, g, s)
+        return out, lse.transpose(0, 3, 1, 2).reshape(b, s, hq)
+    return out
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
@@ -236,58 +318,6 @@ def attn_block(p, x, cfg, *, positions, window=0, causal=True, dtype=jnp.bfloat1
                     softcap=cfg.attn_logit_softcap, impl=impl)
     b, s = x.shape[:2]
     return out.reshape(b, s, -1) @ p["wo"].astype(dtype)
-
-
-def attn_sublayer_tp(lp, x, cfg, ctx, *, positions, window=0,
-                     dtype=jnp.bfloat16, impl="auto"):
-    """Sequence-sharded attention sub-block for overlap TP (survey §4.1.2/4).
-
-    ``x``: (B, S/tp, d) sequence shard; ``lp`` holds this rank's head shards
-    (wq/wk/wv column-sharded, wo row-sharded — the shard_map in_specs from
-    ``core.sharding.overlap_param_specs`` deliver them pre-sliced). The ring
-    all-gather that re-materializes the full sequence is fused into the QKV
-    GEMM ticks; attention runs on this rank's head group through the usual
-    dispatcher (so ``attn_impl="pallas"`` composes); the output projection
-    ring-reduce-scatters back to the (B, S/tp, d) shard.
-    """
-    from repro.train.tensor_parallel import (  # noqa: PLC0415 (import cycle)
-        all_gather_matmul, matmul_reduce_scatter)
-    b, s_loc, _ = x.shape
-    s = s_loc * ctx.size
-    hd = cfg.head_dim
-    ws = (lp["wq"].astype(dtype), lp["wk"].astype(dtype),
-          lp["wv"].astype(dtype))
-    (q, k, v), _ = all_gather_matmul(ctx, x, ws)
-    if cfg.qkv_bias:
-        idx = jax.lax.axis_index(ctx.axis)
-
-        def bias(name, n_loc):
-            return jax.lax.dynamic_slice_in_dim(
-                lp[name].astype(dtype), idx * n_loc, n_loc, 0)
-        q = q + bias("bq", q.shape[-1])
-        k = k + bias("bk", k.shape[-1])
-        v = v + bias("bv", v.shape[-1])
-    q = q.reshape(b, s, q.shape[-1] // hd, hd)
-    k = k.reshape(b, s, k.shape[-1] // hd, hd)
-    v = v.reshape(b, s, v.shape[-1] // hd, hd)
-    if cfg.pos_emb == "rope":
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
-    a = attention(q, k, v, causal=True, window=window,
-                  softcap=cfg.attn_logit_softcap, impl=impl)
-    return matmul_reduce_scatter(ctx, a.reshape(b, s, -1),
-                                 lp["wo"].astype(dtype))
-
-
-def mlp_sublayer_tp(p, x, ctx, dtype=jnp.bfloat16):
-    """Sequence-sharded SwiGLU for overlap TP: one ring all-gather fused into
-    both the gate and up GEMM ticks, ring reduce-scatter after down."""
-    from repro.train.tensor_parallel import (  # noqa: PLC0415 (import cycle)
-        all_gather_matmul, matmul_reduce_scatter)
-    (g, u), _ = all_gather_matmul(
-        ctx, x, (p["gate"].astype(dtype), p["up"].astype(dtype)))
-    return matmul_reduce_scatter(ctx, jax.nn.silu(g) * u,
-                                 p["down"].astype(dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -210,82 +210,11 @@ def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum",
 
 
 # ---------------------------------------------------------------------------
-# overlap-TP path (sequence-sharded residual stream, d_expert-sharded FFN)
-
-
-def moe_block_tp(p, x, cfg: ModelConfig, dtype, ctx, plan=None,
-                 batch_axes=(), n_dp: int = 1):
-    """Overlap-TP MoE block. x: (B, S/tp, d) sequence shard -> same shape.
-
-    A ring all-gather re-materializes this data shard's full token set once,
-    and the routing math then runs replicated across the model axis —
-    deliberately: the GShard capacity/cumsum dropping policy is
-    order-sensitive, so the router must see the same token stream as the
-    GSPMD baseline to make identical drop decisions. The expert SwiGLU is
-    tensor-parallel *inside* each expert (d_expert sharded; all three GEMMs
-    still go through :func:`dispatch_expert_gemm` with group_sizes masking);
-    a psum completes the routed down-GEMM partials and each rank then
-    combines only its own sequence chunk (token rows are independent), while
-    the shared-expert partials ring-reduce-scatter straight into chunks. The
-    load-balancing aux loss reduces its density statistics over
-    ``batch_axes`` so it matches the GSPMD global mean.
-    """
-    from repro.train.tensor_parallel import ring_all_gather  # noqa: PLC0415
-    e = cfg.moe
-    mode = plan.moe_dispatch if plan is not None else "einsum"
-    gemm_impl = plan.moe_gemm_impl if plan is not None else "auto"
-    b, s_loc, d = x.shape
-    xg = ring_all_gather(ctx, x)                       # (B, S, d)
-    n = b * s_loc * ctx.size
-    xf = xg.reshape(n, d)
-    capacity = max(int(n * e.top_k / e.num_experts * e.capacity_factor), 1)
-
-    probs, aux = router_probs(p, xf, cfg, dtype, batch_axes, n_dp)
-
-    if mode == "scatter":
-        slot, wts = topk_scatter_dispatch(probs, cfg, capacity)
-        gs = _group_sizes_from_slots(slot, e.num_experts, capacity)
-        h = _scatter_to_buffers(xf, slot, cfg, capacity)
-    else:
-        dispatch, combine = topk_dispatch(probs, cfg, capacity)
-        gs = _group_sizes_from_dispatch(dispatch)
-        h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
-
-    part = _expert_ffn(p["experts"], h, dtype, gemm_impl, gs)   # (E, C, d)
-    part = jax.lax.psum(part, ctx.axis)   # complete the d_expert partials
-
-    # combine only this rank's sequence chunk: token rows are independent, so
-    # slicing the dispatch metadata first avoids recombining every token's
-    # output tp times (the psum above already made ``part`` replicated)
-    idx = jax.lax.axis_index(ctx.axis) if ctx.size > 1 else 0
-    s_full = s_loc * ctx.size
-
-    def chunk_rows(a):
-        a = a.reshape((b, s_full) + a.shape[1:])
-        a = jax.lax.dynamic_slice_in_dim(a, idx * s_loc, s_loc, 1)
-        return a.reshape((b * s_loc,) + a.shape[2:])
-
-    if mode == "scatter":
-        out = _gather_from_buffers(part, chunk_rows(slot), chunk_rows(wts),
-                                   dtype)
-    else:
-        out = jnp.einsum("nec,ecd->nd", chunk_rows(combine).astype(dtype),
-                         part)
-    if e.num_shared_experts:
-        # the shared-expert width is rank-sharded, so every rank must compute
-        # its partial for every token; the ring reduce-scatter sums the
-        # partials straight into sequence chunks
-        from repro.train.tensor_parallel import ring_reduce_scatter  # noqa: PLC0415
-        sh = jax.nn.silu(xf @ p["shared"]["gate"].astype(dtype)) * (
-            xf @ p["shared"]["up"].astype(dtype))
-        sh_part = (sh @ p["shared"]["down"].astype(dtype)).reshape(
-            b, s_full, d)
-        out = out + ring_reduce_scatter(ctx, sh_part).reshape(b * s_loc, d)
-    return out.reshape(b, s_loc, d), aux
-
-
-# ---------------------------------------------------------------------------
 # expert-parallel path (shard_map + all_to_all)
+#
+# The overlap-TP / context-parallel MoE wiring (ring-gathered routing,
+# d_expert-sharded expert FFN, shard-local routing with batch-global aux)
+# lives in the unified block executor: repro.train.executor.moe_block_ex.
 
 def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
            dispatch_mode: str = "einsum", gemm_impl: str = "auto"):

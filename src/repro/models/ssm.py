@@ -54,10 +54,18 @@ def init_ssm(rng, cfg: ModelConfig):
     }
 
 
-def _causal_conv(x, w, dtype):
-    """Depthwise causal conv1d. x: (B, L, C), w: (C, K)."""
+def _causal_conv(x, w, dtype, left=None):
+    """Depthwise causal conv1d. x: (B, L, C), w: (C, K).
+
+    ``left`` (B, K-1, C) replaces the zero left-padding with real context —
+    the context-parallel executor passes the previous cp rank's halo so the
+    conv is seamless across sequence shards.
+    """
     k = w.shape[-1]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if left is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([left.astype(x.dtype), x], axis=1)
     # windowed sum: out[:, t, c] = sum_j x[:, t+j, c] * w[c, j]
     out = jnp.zeros_like(x)
     for j in range(k):
@@ -168,66 +176,6 @@ def ssm_block(p, x, cfg: ModelConfig, dtype, initial_state=None, plan=None):
     y = y.reshape(b, l, di).astype(dtype)
     y = rms_norm(y * jax.nn.silu(z), p["scale"], cfg.rms_eps)
     return y @ p["out_proj"].astype(dtype)
-
-
-def ssm_block_tp(p, x, cfg: ModelConfig, dtype, ctx, plan=None):
-    """Overlap-TP Mamba2 block. x: (B, L/tp, d) sequence shard -> same shape.
-
-    Heads carry the model-parallel dim (the wz/wx/wdt column shards arrive
-    pre-sliced via the shard_map in_specs); the ring all-gather that
-    re-materializes the full sequence is fused into the in_proj GEMM ticks,
-    with the B/C projections reusing the gathered copy (replicated weights —
-    d_state is tiny, see the wB/wC note in core/sharding.py). The SSD scan
-    runs on this rank's head shard through the usual dispatcher (heads are
-    independent, so ``ssm_impl="pallas"`` composes), the gated RMSNorm
-    reduces over the full (sharded) d_inner with a psum of per-rank sums of
-    squares, and out_proj ring-reduce-scatters back to the sequence shard.
-    Requires n_groups == 1 (every head shares the single global B/C group).
-    """
-    from repro.kernels.dispatch import dispatch_ssd_scan  # noqa: PLC0415
-    from repro.train.tensor_parallel import (  # noqa: PLC0415 (import cycle)
-        all_gather_matmul, matmul_reduce_scatter)
-
-    s = cfg.ssm
-    di, nh, g, n = ssm_dims(cfg)
-    tp = ctx.size
-    assert g == 1 and nh % tp == 0 and di % tp == 0, (g, nh, di, tp)
-    nh_l, di_l = nh // tp, di // tp
-    b, l_loc, _ = x.shape
-    l = l_loc * tp
-    idx = jax.lax.axis_index(ctx.axis) if tp > 1 else 0
-
-    (z, xin, dtp), xg = all_gather_matmul(
-        ctx, x, (p["wz"].astype(dtype), p["wx"].astype(dtype),
-                 p["wdt"].astype(dtype)))
-    Bv = xg @ p["wB"].astype(dtype)
-    Cv = xg @ p["wC"].astype(dtype)
-    dt_bias = jax.lax.dynamic_slice_in_dim(p["dt_bias"], idx * nh_l, nh_l, 0)
-    dt = jax.nn.softplus(dtp.astype(jnp.float32) + dt_bias)
-
-    conv_x = jax.lax.dynamic_slice_in_dim(p["conv_x"], idx * di_l, di_l, 0)
-    xin = jax.nn.silu(_causal_conv(xin, conv_x, dtype))
-    Bv = jax.nn.silu(_causal_conv(Bv, p["conv_B"], dtype))
-    Cv = jax.nn.silu(_causal_conv(Cv, p["conv_C"], dtype))
-
-    A = -jnp.exp(jax.lax.dynamic_slice_in_dim(p["A_log"], idx * nh_l, nh_l, 0))
-    xh = xin.reshape(b, l, nh_l, s.head_dim)
-    y, _ = dispatch_ssd_scan(
-        xh, dt, A, Bv.reshape(b, l, g, n), Cv.reshape(b, l, g, n),
-        chunk=s.chunk, impl=plan.ssm_impl if plan is not None else "auto")
-    D = jax.lax.dynamic_slice_in_dim(p["D"], idx * nh_l, nh_l, 0)
-    y = y + xh.astype(jnp.float32) * D[None, None, :, None]
-    y = y.reshape(b, l, di_l).astype(dtype)
-
-    # gated RMSNorm over the full (model-sharded) d_inner: per-rank sum of
-    # squares + psum reproduces rms_norm's full-width mean
-    scale = jax.lax.dynamic_slice_in_dim(p["scale"], idx * di_l, di_l, 0)
-    yz = (y * jax.nn.silu(z)).astype(jnp.float32)
-    ssq = jax.lax.psum(jnp.sum(jnp.square(yz), axis=-1, keepdims=True),
-                       ctx.axis)
-    yn = ((yz * jax.lax.rsqrt(ssq / di + cfg.rms_eps))
-          * (1.0 + scale.astype(jnp.float32))).astype(dtype)
-    return matmul_reduce_scatter(ctx, yn, p["out_proj"].astype(dtype))
 
 
 # ---------------------------------------------------------------------------

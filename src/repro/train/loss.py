@@ -33,11 +33,14 @@ _pmax_stopgrad.defvjp(lambda x, a: (_pmax_stopgrad(x, a), None),
                       lambda a, _, g: (jnp.zeros_like(g),))
 
 
-def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0,
+                  reduction: str = "mean"):
     """logits: (..., V) fp32; labels: (...) int32. Mean over all positions.
 
     ``z_loss`` (PaLM-style) regularizes the partition function — also keeps the
-    softmax numerics healthy in long bf16 runs.
+    softmax numerics healthy in long bf16 runs. ``reduction="none"`` returns
+    the per-position nll instead of the mean — the context-parallel executor
+    loss owns its own sum/psum reduction over sequence shards.
     """
     m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
     shifted = logits - m
@@ -47,6 +50,8 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
     nll = lse - label_logit
     if z_loss:
         nll = nll + z_loss * jnp.square(lse)
+    if reduction == "none":
+        return nll
     return nll.mean()
 
 

@@ -49,6 +49,16 @@ tick in the 1F1B backward), it runs masked on every tick instead of behind
 the ``lax.cond`` — the V/tp vocab shard keeps that dead compute tp× smaller
 than a full-vocab head.
 
+CP x TP x PP (survey §4.1.4): with ``plan.cp > 1`` and a "cp" mesh axis, the
+sequence itself is sharded end to end — the stage-to-stage ``ppermute``
+moves (mb, s/(cp·tp), d) shards and the zigzag ring-attention / KV-gather
+collectives of the block executor (``train/executor.py``) run inside each
+tick, next to the TP rings. Inputs are zigzag-permuted outside the
+shard_map for the ring layout; each rank's per-microbatch loss is the mean
+over its own chunk, completed by a cp ``pmean`` (forward) and a 1/cp seed
+split plus all-leaf cp ``psum`` (1F1B backward — params are cp-replicated
+but each rank's backward saw only its chunk).
+
 Supported for decoder-only families (dense / vlm backbones); the hybrid/
 enc-dec archs pipeline equally in principle but are out of scope for this
 feature (EXPERIMENTS.md notes which configs exercise it).
@@ -105,27 +115,53 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     # stage tick; activations rotate stage-to-stage as (mb, s/tp, d) shards.
     # Same fallback contract as train.step: "auto" quietly keeps GSPMD when
     # the ring path's preconditions fail; an explicit "overlap" raises.
-    from repro.kernels.dispatch import select_tp_impl
+    from repro.kernels.dispatch import select_cp_impl, select_tp_impl
+    from repro.train import executor as exlib
+    from repro.train import tensor_parallel as tplib
     tp = mesh.shape.get("model", 1)
     if tp <= 1 and plan.tp_impl == "overlap":
         raise ValueError(
             "tp_impl='overlap' was requested explicitly but the pipeline mesh "
             "has no 'model' axis of size >= 2 to run the rings on")
-    tp_overlap = tp > 1 and select_tp_impl(plan.tp_impl) == "overlap"
+    # under cp the explicit rings are the ONLY tp execution (validate()
+    # rejects cp x gspmd-tp), so a cp plan with tp > 1 engages them on every
+    # backend — matching executor.resolve_context; without cp, "auto" keeps
+    # its backend resolution (overlap on TPU, gspmd elsewhere)
+    tp_overlap = tp > 1 and (
+        select_tp_impl(plan.tp_impl) == "overlap"
+        or (plan.cp > 1 and plan.tp > 1))
     if tp_overlap:
-        from repro.train import tensor_parallel as tplib
         try:
             tplib.check_overlap_support(cfg, plan, tp)
         except ValueError:
             if plan.tp_impl == "overlap":
                 raise
             tp_overlap = False
-    if tp_overlap:
-        tp_ctx = tplib.RingCtx("model", tp)
-        layer_fwd = tplib.tp_decoder_layer_fwd(cfg, plan, tp_ctx, dtype,
-                                               batch_axes, n_dp)
+    # CP x PP (x TP): context parallelism shards the sequence over the "cp"
+    # mesh axis; the ring-attention / KV-gather collectives run inside each
+    # 1F1B tick like the TP rings do, and the stage-to-stage ppermute moves
+    # (mb, s/(cp·tp), d) shards — the inter-stage transfer shrinks by cp too.
+    cp = mesh.shape.get("cp", 1) if plan.cp > 1 else 1
+    if plan.cp > 1 and cp < plan.cp:
+        raise ValueError(
+            f"plan.cp={plan.cp} needs a 'cp' mesh axis of size {plan.cp} on "
+            f"the pipeline mesh, got {mesh.shape}")
+    if cp > 1:
+        exlib.check_cp_support(cfg, plan, cp)
+    cp_impl = select_cp_impl(
+        plan.cp_impl, family=cfg.family, window=cfg.sliding_window,
+        local_global_alternating=bool(cfg.local_global_alternating
+                                      and cfg.sliding_window)) if cp > 1 \
+        else "ring"
+    zigzag = cp > 1 and cp_impl == "ring"
+    tp_ctx = tplib.RingCtx("model", tp) if tp_overlap else None
+    if tp_overlap or cp > 1:
+        ctx = exlib.ParallelContext(
+            tp=tp_ctx, cp=tplib.RingCtx("cp", cp) if cp > 1 else None,
+            cp_impl=cp_impl, batch_axes=tuple(batch_axes or ()), n_dp=n_dp)
+        layer_fwd = exlib.decoder_layer(ctx, cfg, plan, dtype)
     else:
-        tp_ctx = None
+        ctx = exlib.local_context(batch_axes=tuple(batch_axes or ()))
         layer_fwd = _decoder_layer_fwd(cfg, dtype, None, plan, batch_axes)
 
     # param specs: layer stack sharded over pod on dim 0; the rest replicated
@@ -225,7 +261,8 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         """Fill-drain forward pipeline (shared by both schedules). Returns the
         replicated (2,) vector [xent, moe_aux]."""
         toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
-        tick = _tick_factory(toks_mb, labs_mb, windows_l, jnp.arange(s))
+        tick = _tick_factory(toks_mb, labs_mb, windows_l,
+                             exlib.cp_local_positions(ctx, s))
 
         def fwd_tick(carry, t):
             buf, loss_sum, aux_sum = carry
@@ -239,12 +276,16 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         (_, loss_sum, aux_sum), _ = jax.lax.scan(
             fwd_tick, (buf0, zero, zero), jnp.arange(n_micro + pp - 1))
         # broadcast the last stage's mean loss to all pods, then average
-        # over the data-parallel shards
+        # over the data-parallel shards (and the cp sequence shards: each
+        # rank's per-microbatch loss is the mean over its own chunk)
         loss = jax.lax.psum(loss_sum[0], "pod") / n_micro
         aux = jax.lax.psum(aux_sum[0], "pod") / n_micro
         if batch_axes:
             loss = jax.lax.pmean(loss, batch_axes)
             aux = jax.lax.pmean(aux, batch_axes)
+        if cp > 1:
+            loss = jax.lax.pmean(loss, "cp")
+            aux = jax.lax.pmean(aux, "cp")
         return jnp.stack([loss, aux])
 
     def _staged_bwd(params_local, tokens_l, labels_l, windows_l, g):
@@ -255,7 +296,8 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         are O(P), never O(M)."""
         stage = jax.lax.axis_index("pod")
         toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
-        tick = _tick_factory(toks_mb, labs_mb, windows_l, jnp.arange(s))
+        tick = _tick_factory(toks_mb, labs_mb, windows_l,
+                             exlib.cp_local_positions(ctx, s))
 
         ring = 2 * pp - 1
         n_ticks = n_micro + 2 * (pp - 1)
@@ -265,8 +307,9 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         # it cooperatively through the ring/psum collectives), so the weight
         # splits across the tp replicas: the psum transposes inside the vjp
         # re-sum the per-rank seeds, and a full seed per rank would overcount
-        # every gradient by exactly tp.
-        w_scale = n_micro * n_dp * (tp if tp_overlap else 1)
+        # every gradient by exactly tp. The cp pmean splits it across the cp
+        # ranks the same way (each chunk's mean carries weight 1/cp).
+        w_scale = n_micro * n_dp * (tp if tp_overlap else 1) * cp
         w_loss = g[0] / w_scale
         w_aux = g[1] / w_scale
 
@@ -320,6 +363,10 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                 g_leaf = jax.lax.psum(g_leaf, batch_axes)
             if "layers" not in _names(path):
                 g_leaf = jax.lax.psum(g_leaf, "pod")
+            if cp > 1:
+                # params are replicated over cp but each rank's backward saw
+                # only its sequence chunk — psum completes every leaf
+                g_leaf = jax.lax.psum(g_leaf, "cp")
             if tp_overlap:
                 from repro.core.sharding import overlap_spec_for_param
                 spec = overlap_spec_for_param(
@@ -330,12 +377,14 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
 
         return jax.tree_util.tree_map_with_path(finish, gacc)
 
+    seq_ax = "cp" if cp > 1 else None
+
     def _run_fwd(params, tokens, labels):
         windows = windows_all.reshape(pp, layers_per_stage)
         return shard_map(
             _staged_fwd, mesh=mesh,
             in_specs=(param_specs(params),
-                      P(baxes, None), P(baxes, None), P("pod", None)),
+                      P(baxes, seq_ax), P(baxes, seq_ax), P("pod", None)),
             out_specs=P(),
         )(params, tokens, labels, windows)
 
@@ -354,7 +403,7 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         windows = windows_all.reshape(pp, layers_per_stage)
         grads = shard_map(
             _staged_bwd, mesh=mesh,
-            in_specs=(pspecs, P(baxes, None), P(baxes, None),
+            in_specs=(pspecs, P(baxes, seq_ax), P(baxes, seq_ax),
                       P("pod", None), P()),
             out_specs=pspecs,
         )(params, tokens, labels, windows, g)
@@ -366,6 +415,12 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
 
     def loss_fn(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
+        if zigzag:
+            # ring-cp layout: zigzag-permute the sequence outside the
+            # shard_map so the contiguous P(..., "cp") spec hands each rank
+            # its balanced sub-chunk pair (position-wise ops are invariant)
+            perm = exlib.zigzag_permutation(tokens.shape[1], cp)
+            tokens, labels = tokens[:, perm], labels[:, perm]
         if schedule == "1f1b":
             v = f1b(params, tokens, labels)
         else:

@@ -41,16 +41,18 @@ communication regime the survey's communication-optimization chapter (§4.1.2,
   max/logsumexp/target-logit plus scalar-sized ``psum`` — the ``(B, S, V)``
   logits tensor is never materialized or all-gathered.
 
-The family block bodies live next to their GSPMD twins
-(:func:`repro.models.layers.attn_sublayer_tp` /
-:func:`repro.models.moe.moe_block_tp` / :func:`repro.models.ssm.ssm_block_tp`)
-and still route attention / expert GEMMs / SSD scans through
-``repro.kernels.dispatch``, so ``tp_impl="overlap"`` composes with the fused
-Pallas kernels. :func:`make_tp_loss_fn` assembles the whole training-path
-loss; ``train/pipeline.py`` reuses the same layer bodies for TP x PP (ring
-steps inside each 1F1B tick). Numerical contract, tested in
-tests/test_tensor_parallel.py: overlap loss/grads match the GSPMD path on a
-2-way model mesh for the dense, MoE and Mamba2 families.
+This module owns the ring *primitives* (collective matmuls, ring
+gather/scatter, the vocab-parallel embedding and head). The family block
+bodies that consume them live in the unified block executor
+(``repro.train.executor``: ``attn_block`` / ``mlp_block_ex`` /
+``moe_block_ex`` / ``ssm_block_ex``, parameterized by a ``ParallelContext``)
+— one wiring shared by the TP loss, the context-parallel (cp) loss and the
+pipeline stage ticks, still routing attention / expert GEMMs / SSD scans
+through ``repro.kernels.dispatch`` so ``tp_impl="overlap"`` composes with the
+fused Pallas kernels. :func:`make_tp_loss_fn` is kept as the stable entry
+point and delegates to ``executor.make_executor_loss_fn``. Numerical
+contract, tested in tests/test_tensor_parallel.py: overlap loss/grads match
+the GSPMD path on a 2-way model mesh for the dense, MoE and Mamba2 families.
 """
 
 from __future__ import annotations
@@ -61,14 +63,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import sharding as shardlib
-from repro.core.compat import shard_map
 from repro.core.config import Family, ModelConfig, ParallelPlan
 from repro.kernels.dispatch import dispatch_tp_matmul
-from repro.models.families import _layer_windows, _remat
-from repro.models.layers import rms_norm
 from repro.train.loss import cross_entropy_vp
 
 
@@ -336,72 +334,31 @@ def tp_head_nll(params, x, labels, cfg: ModelConfig, ctx: RingCtx, dtype,
 
 
 # ---------------------------------------------------------------------------
-# family layer bodies (sequence-sharded residual stream)
-
-
-def tp_decoder_layer_fwd(cfg: ModelConfig, plan: ParallelPlan, ctx: RingCtx,
-                         dtype, batch_axes: Tuple[str, ...] = ("data",),
-                         n_dp: int = 1):
-    """Sequence-sharded twin of families._decoder_layer_fwd (dense / MoE)."""
-    from repro.models import moe as moe_lib
-    from repro.models.layers import attn_sublayer_tp, mlp_sublayer_tp
-    from jax.ad_checkpoint import checkpoint_name
-    alternating = bool(cfg.local_global_alternating and cfg.sliding_window)
-
-    def layer(x, lp, window, positions):
-        h = rms_norm(x, lp["norm1"]["scale"], cfg.rms_eps)
-        a = attn_sublayer_tp(
-            lp["attn"], h, cfg, ctx, positions=positions,
-            window=window if alternating else cfg.sliding_window,
-            dtype=dtype, impl=plan.attn_impl)
-        a = checkpoint_name(a, "attn_out")
-        if cfg.post_norm:
-            a = rms_norm(a, lp["norm1_post"]["scale"], cfg.rms_eps)
-        x = x + a
-        h = rms_norm(x, lp["norm2"]["scale"], cfg.rms_eps)
-        if cfg.family == Family.MOE:
-            m, aux = moe_lib.moe_block_tp(lp["moe"], h, cfg, dtype, ctx, plan,
-                                          batch_axes=batch_axes, n_dp=n_dp)
-        else:
-            m, aux = mlp_sublayer_tp(lp["mlp"], h, ctx, dtype), jnp.float32(0.0)
-        if cfg.post_norm:
-            m = rms_norm(m, lp["norm2_post"]["scale"], cfg.rms_eps)
-        return x + m, aux
-    return layer
-
-
-def tp_ssm_layer_fwd(cfg: ModelConfig, plan: ParallelPlan, ctx: RingCtx, dtype):
-    """Sequence-sharded twin of the Mamba2 layer body."""
-    from repro.models import ssm as ssm_lib
-    from jax.ad_checkpoint import checkpoint_name
-
-    def layer(x, lp, window, positions):
-        del window, positions
-        h = rms_norm(x, lp["norm1"]["scale"], cfg.rms_eps)
-        y = ssm_lib.ssm_block_tp(lp["ssm"], h, cfg, dtype, ctx, plan)
-        y = checkpoint_name(y, "block_out")
-        return x + y, jnp.float32(0.0)
-    return layer
-
-
-# ---------------------------------------------------------------------------
 # whole-model loss
 
 
-def check_overlap_support(cfg: ModelConfig, plan: ParallelPlan, tp: int):
-    """Static preconditions for the ring path. Raises ValueError otherwise."""
+def decoder_only_support_errors(cfg: ModelConfig):
+    """Shared static preconditions of the explicit shard_map paths (overlap
+    TP and context parallelism): decoder-only dense/moe/ssm families with
+    rope positions. Returns a list of problems (empty = supported)."""
     bad = []
     if cfg.family not in (Family.DENSE, Family.MOE, Family.SSM) \
             or cfg.is_enc_dec or cfg.vision_tokens:
         bad.append(f"family {cfg.family!r} (dense/moe/ssm decoder-only)")
+    elif cfg.family in (Family.DENSE, Family.MOE) and cfg.pos_emb != "rope":
+        bad.append(f"pos_emb {cfg.pos_emb!r}")
+    return bad
+
+
+def check_overlap_support(cfg: ModelConfig, plan: ParallelPlan, tp: int):
+    """Static preconditions for the ring path. Raises ValueError otherwise."""
+    bad = decoder_only_support_errors(cfg)
     vocab = cfg.vocab
     if plan.pad_vocab_to_multiple:
         vocab = -(-vocab // plan.pad_vocab_to_multiple) * plan.pad_vocab_to_multiple
     if vocab % tp:
         bad.append(f"vocab {vocab} % tp {tp} != 0 (set pad_vocab_to_multiple)")
     if cfg.family in (Family.DENSE, Family.MOE):
-        if cfg.pos_emb != "rope":
-            bad.append(f"pos_emb {cfg.pos_emb!r}")
         if cfg.n_heads % tp or cfg.n_kv_heads % tp:
             bad.append(f"heads ({cfg.n_heads}, {cfg.n_kv_heads}) % tp != 0")
     if cfg.family == Family.DENSE and cfg.d_ff % tp:
@@ -434,59 +391,12 @@ def make_tp_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     psum-of-sums / global-count. MoE note: routing runs on the ring-gathered
     token set of each data shard, so with the default capacity factor the
     dropping policy is per-data-shard (exactly GSPMD's when dp == 1).
+
+    Kept as the stable name; the wiring lives in the unified block executor
+    (``repro.train.executor.make_executor_loss_fn``), which also composes
+    the context-parallel axis when ``plan.cp > 1``.
     """
-    if mesh.shape.get("model", 1) < 2:
+    from repro.train.executor import make_executor_loss_fn  # noqa: PLC0415
+    if plan.cp <= 1 and mesh.shape.get("model", 1) < 2:
         raise ValueError("tp_impl='overlap' needs a 'model' mesh axis >= 2")
-    tp = mesh.shape["model"]
-    check_overlap_support(cfg, plan, tp)
-    if plan.dp_shard > 1:
-        raise ValueError("tp_impl='overlap' expects dp_shard == 1 "
-                         "(params enter the shard_map replicated over data)")
-    ctx = RingCtx("model", tp)
-    dtype = jnp.dtype(plan.compute_dtype)
-    windows_all = jnp.asarray(_layer_windows(cfg))
-    baxes = batch_axes if batch_axes else None
-    n_dp = 1
-    for a in (batch_axes or ()):
-        n_dp *= mesh.shape[a]
-
-    if cfg.family == Family.SSM:
-        layer = tp_ssm_layer_fwd(cfg, plan, ctx, dtype)
-    else:
-        layer = tp_decoder_layer_fwd(cfg, plan, ctx, dtype, batch_axes, n_dp)
-
-    def local_fn(params_l, tokens, labels):
-        b, s = tokens.shape
-        assert s % tp == 0, f"seq {s} must divide tp {tp} for overlap TP"
-        x = tp_embed(params_l, tokens, cfg, dtype, ctx)
-        positions = jnp.arange(s)
-
-        def body(carry, xs):
-            xc, aux = carry
-            lp, w = xs
-            xn, a = layer(xc, lp, w, positions)
-            return (xn, aux + a), None
-
-        body = _remat(body, plan.remat)
-        (x, aux), _ = jax.lax.scan(
-            body, (x, jnp.zeros((1,), jnp.float32)),
-            (params_l["layers"], windows_all))
-        x = rms_norm(x, params_l["final_norm"]["scale"], cfg.rms_eps)
-        nll = tp_head_nll(params_l, x, labels, cfg, ctx, dtype, z_loss)
-        tot = nll.sum()
-        if baxes:
-            tot = jax.lax.psum(tot, baxes)
-        loss = tot / (b * n_dp * s)
-        return jnp.stack([loss, aux[0]])
-
-    def loss_fn(params, batch):
-        pspecs = shardlib.overlap_param_specs(params, cfg, plan, mesh)
-        v = shard_map(
-            local_fn, mesh=mesh,
-            in_specs=(pspecs, P(baxes, None), P(baxes, None)),
-            out_specs=P(),
-        )(params, batch["tokens"], batch["labels"])
-        loss, aux = v[0], v[1]
-        return loss + aux, {"xent": loss, "moe_aux": aux}
-
-    return loss_fn
+    return make_executor_loss_fn(cfg, plan, mesh, batch_axes, z_loss=z_loss)

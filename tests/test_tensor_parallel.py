@@ -227,7 +227,8 @@ def test_overlap_matches_gspmd_moe(multidevice):
 
 
 def test_overlap_matches_gspmd_moe_scatter(multidevice):
-    """The MegaBlocks-style scatter dispatch path through moe_block_tp."""
+    """The MegaBlocks-style scatter dispatch path through the executor's
+    moe_block_ex."""
     multidevice(_FAMILY_EQUIV_TEMPLATE.format(cfg=_MOE_CFG,
                                               dispatch="scatter"))
 
