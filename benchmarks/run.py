@@ -604,12 +604,70 @@ def bench_checkpoint(tmp="/tmp/repro_bench_ckpt"):
         t0 = time.perf_counter()
         _, _ = mgr.restore(state, step=0)
         us_restore = (time.perf_counter() - t0) * 1e6
+        # double-buffered snapshot (survey §8.3.1): the stall is one jitted
+        # device-side clone dispatch; host copy + persist drain off-thread.
+        # Warm save first so the cloner's compile is not in the stall number.
+        mgr3 = CheckpointManager(tmp + "_d", async_snapshot=True)
+        mgr3.save(0, state)
+        mgr3.wait()
+        t0 = time.perf_counter()
+        mgr3.save(1, state)
+        us_db = (time.perf_counter() - t0) * 1e6
+        mgr3.wait()
         emit(f"ckpt.sync.{tag}", us_sync, f"bytes={nbytes}")
         emit(f"ckpt.snapshot_stall.{tag}", us_stall,
              f"bytes={nbytes};stall_reduction={us_sync/max(us_stall,1):.1f}x")
+        emit(f"ckpt.snapshot_stall.double_buffered.{tag}", us_db,
+             f"bytes={nbytes};vs_blocking_snapshot="
+             f"{us_stall/max(us_db,1):.1f}x")
         emit(f"ckpt.restore.{tag}", us_restore, f"bytes={nbytes}")
         shutil.rmtree(tmp, ignore_errors=True)
         shutil.rmtree(tmp + "_a", ignore_errors=True)
+        shutil.rmtree(tmp + "_d", ignore_errors=True)
+
+    # elastic reshard-restore latency (survey §8.3.2): a ZeRO-1 checkpoint
+    # written on a 2x2 mesh restored onto the surviving 1x2, vs the
+    # same-layout replay of the same bytes (4 forced host devices)
+    script = r"""
+import time, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import Family, ModelConfig, ParallelPlan, sharding
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import shrink_mesh
+from repro.models import build_model
+from repro.train import init_train_state
+cfg = ModelConfig("b", Family.DENSE, n_layers=4, d_model=512, n_heads=8,
+                  n_kv_heads=8, d_ff=2048, vocab=8192)
+plan = ParallelPlan(remat="none", compute_dtype="float32", zero_stage=1)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+model = build_model(cfg, plan, mesh, ("data",))
+state = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
+nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
+mgr = CheckpointManager(tempfile.mkdtemp(), async_persist=False)
+mgr.save(0, state, blocking=True, plan=plan, mesh=mesh)
+t0 = time.perf_counter()
+_, replay = mgr.restore(state)
+jax.block_until_ready(jax.tree.leaves(replay))
+same_us = (time.perf_counter() - t0) * 1e6
+mesh2 = shrink_mesh(mesh, "data", lost=1)
+model2 = build_model(cfg, plan, mesh2, ("data",))
+tmpl = init_train_state(model2, jax.random.PRNGKey(1), mesh=mesh2, plan=plan)
+sh = sharding.train_state_shardings(tmpl, cfg, plan, mesh2)
+assert mgr.check_plan(plan, mesh=mesh2, elastic=True) == "reshard"
+t0 = time.perf_counter()
+_, resharded = mgr.restore_resharded(tmpl, shardings=sh)
+jax.block_until_ready(jax.tree.leaves(resharded))
+reshard_us = (time.perf_counter() - t0) * 1e6
+for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(resharded.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print(f"RESHARD_OK bytes={nbytes} same_us={same_us:.0f} "
+      f"reshard_us={reshard_us:.0f}", flush=True)
+"""
+    out = run_multidevice(script, 4, "RESHARD_OK")
+    import re
+    m = re.search(r"bytes=(\d+) same_us=(\d+) reshard_us=(\d+)", out)
+    emit("ckpt.reshard_restore.2x2_to_1x2", float(m.group(3)),
+         f"bytes={m.group(1)};same_layout_us={m.group(2)};values_match=True")
 
 
 # ---------------------------------------------------------------------------
@@ -820,6 +878,69 @@ print("CP_OK", flush=True)
     us = timeit(lambda: run_multidevice(script, 2, "CP_OK", timeout=900),
                 warmup=0, iters=1)
     emit("quick.cp.ring", us, "mesh=1x2;grads_match_single_device=True")
+
+    # elastic recovery smoke: hang on a 2x2 ZeRO-1 run -> remesh to 1x2 ->
+    # reshard-restore -> the finished loss sequence bit-matches a reference
+    # that re-laid-out at the same step boundary
+    script = r"""
+import time, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.core import (Family, InputShape, ModelConfig, ParallelPlan,
+                        RecoveryPolicy, sharding)
+from repro.data import SyntheticDataset
+from repro.ft import Monitor, RemeshSpec, run_with_recovery
+from repro.launch.mesh import shrink_mesh
+from repro.models import build_model
+from repro.train import Hyper, init_train_state, make_train_step
+cfg = ModelConfig("q", Family.DENSE, n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64)
+plan = ParallelPlan(remat="none", compute_dtype="float32", zero_stage=1)
+hyper = Hyper(peak_lr=1e-3, total_steps=20, z_loss=0.0)
+ds = SyntheticDataset(cfg, InputShape("q", 16, 8, "train"))
+get_batch = lambda s: {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+model = build_model(cfg, plan, mesh, ("data",))
+state0 = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
+step_big = jax.jit(make_train_step(model, plan, hyper, mesh=mesh))
+mesh2 = shrink_mesh(mesh, "data", lost=1)
+model2 = build_model(cfg, plan, mesh2, ("data",))
+tmpl = init_train_state(model2, jax.random.PRNGKey(1), mesh=mesh2, plan=plan)
+sh = sharding.train_state_shardings(tmpl, cfg, plan, mesh2)
+step_small = jax.jit(make_train_step(model2, plan, hyper, mesh=mesh2))
+tmpl = jax.tree.map(jax.device_put, tmpl, sh)
+jax.block_until_ready(step_small(tmpl, get_batch(0))[0].params)
+fired = {"n": 0}
+def injector(step, st):
+    if step == 7 and fired["n"] == 0:
+        fired["n"] = 1
+        time.sleep(1.0)
+    return st
+ckpt = CheckpointManager(tempfile.mkdtemp(), async_persist=False)
+final, report = run_with_recovery(
+    state0, step_big, get_batch, 10, ckpt,
+    Monitor(min_history=3, hang_min_seconds=0.3), ckpt_every=3,
+    plan=plan, mesh=mesh, policy=RecoveryPolicy(hang="remesh"),
+    fault_injector=injector, remesh=lambda: RemeshSpec(
+        train_step=step_small, state_template=tmpl, shardings=sh,
+        plan=plan, mesh=mesh2))
+assert report.remeshes == 1 and report.actions == [(7, "hang", "remesh")]
+ref = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
+ref_losses = []
+for s in range(6):
+    ref, m = step_big(ref, get_batch(s))
+    ref_losses.append(float(m["loss"]))
+ref = jax.tree.map(jax.device_put, ref, sh)
+for s in range(6, 10):
+    ref, m = step_small(ref, get_batch(s))
+    ref_losses.append(float(m["loss"]))
+assert report.losses == ref_losses, (report.losses, ref_losses)
+print("ELASTIC_OK", flush=True)
+"""
+    us = timeit(lambda: run_multidevice(script, 4, "ELASTIC_OK", timeout=900),
+                warmup=0, iters=1)
+    emit("quick.ft.elastic", us,
+         "mesh=2x2_to_1x2;remesh=1;losses_bitmatch_reference=True")
 
 
 def main() -> None:

@@ -5,11 +5,15 @@
 # mode, one shape per op), the overlap-TP ring path vs gspmd on a 2-way model
 # mesh (quick.tp.overlap), the zigzag ring context-parallel path vs the
 # single-device oracle on a 2-way cp mesh (quick.cp.ring), and a
-# selective-remat train step; records the remat-policy peak-memory/step-time
+# selective-remat train step, and the elastic recovery path — hang on a 2x2
+# ZeRO-1 run, remesh to 1x2, reshard-restore, bit-matching losses
+# (quick.ft.elastic); records the remat-policy peak-memory/step-time
 # trade-off to BENCH_trainstep.json, the gspmd-vs-overlap tokens/sec +
-# bytes-transferred sweep to BENCH_tp.json, and the gather-vs-ring
+# bytes-transferred sweep to BENCH_tp.json, the gather-vs-ring
 # context-parallel sweep (incl. the S=16k attention-block peak-memory
-# assertion) to BENCH_cp.json (run.py prints a one-line delta vs the previous
+# assertion) to BENCH_cp.json, and the checkpoint sweep — blocking vs
+# double-buffered snapshot stall plus cross-mesh reshard-restore latency —
+# to BENCH_ckpt.json (run.py prints a one-line delta vs the previous
 # JSON so the perf trajectory is visible in CI logs; a missing previous JSON
 # is reported as a first run, not an error).
 #
@@ -24,3 +28,4 @@ python -m benchmarks.run --quick | tee bench_quick.log
 python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee bench_trainstep.log
 python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log
 python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log
+python -m benchmarks.run --only ckpt --json BENCH_ckpt.json | tee bench_ckpt.log

@@ -1,10 +1,26 @@
-"""Checkpointing (survey §8.3).
+"""Checkpointing (survey §8.3) — shard-aware save, async snapshots, and
+elastic cross-mesh restore.
 
 Persistent checkpoints follow the snapshot/persist split of §8.3.1:
 
-- ``snapshot``: device -> host copy (fast; the only phase that stalls training).
+- ``snapshot``: device -> host copy (the only phase that can stall training);
 - ``persist``: host -> disk write, runs on a background thread
   (snapshot-stall checkpointing à la Check-N-Run/MegaScale).
+
+With ``async_snapshot=True`` the snapshot itself is double-buffered
+(§8.3.1 snapshot-stall elimination): ``save`` only *dispatches* a device-side
+clone of the state (one jitted copy per tree layout, asynchronously executed,
+sharding-preserving) and returns; the device->host copy and the disk write
+both run on the background thread against the clone. The clone is what makes
+this safe — the training loop is free to donate the live state's buffers into
+the next step while the copy drains (``np.asarray`` of a CPU shard is a
+zero-copy *view* of the device buffer, so snapshotting the live state without
+a clone would race donation). Cost: transiently one extra copy of the state
+in device memory (the classic double buffer). ``wait()`` is the completion
+fence — ``save`` calls it first, so at most one snapshot+persist is in
+flight — and any failure on the background thread (full disk, revoked
+directory) is re-raised at the next ``save()``/``wait()`` instead of dying
+silently with the thread.
 
 Layout: one ``.npz`` per checkpoint plus a JSON manifest carrying the step,
 the flattened tree structure and integrity checksums.
@@ -13,12 +29,25 @@ Shard-aware (survey §3.3.1: a designated worker per group writes its shard):
 the snapshot phase walks ``jax.Array.addressable_shards`` and copies each
 *unique* device shard to host instead of gathering the full array — under
 cp/tp/ZeRO meshes the device→host copy moves 1/shards of the bytes and the
-replicated copy never materializes. The manifest records each shard's index
-slices plus the :class:`repro.core.config.ParallelPlan` axes
+replicated copy never materializes. The manifest records each shard's
+global-index slices plus the :class:`repro.core.config.ParallelPlan` axes
 (``tp``/``cp``/``pp``/``dp_shard``/``zero_stage``/impl knobs) and mesh axis
-sizes, so ``ft/recovery.py`` can refuse to replay a checkpoint onto an
-incompatible layout. ``restore`` reassembles full arrays from the shard
-slices and re-places them with each target leaf's sharding.
+sizes.
+
+Restore is **elastic** (survey §8.3.2, the cloud-native resumable-on-a-
+different-cluster gap): because the manifest records every shard's global
+index slices, a checkpoint written on one mesh can be reassembled into full
+arrays and *re-sliced* onto any other layout — fewer hosts after a failure,
+more after repair. :meth:`CheckpointManager.check_plan` is the router:
+``"replay"`` when the requested ParallelPlan layout axes and mesh axis sizes
+match the recorded ones (fast shard-to-shard :meth:`restore`), ``"reshard"``
+when they differ and ``elastic=True`` (take
+:meth:`restore_resharded`, which re-places every leaf — params *and* the
+ZeRO-1 optimizer moment shards, which land re-scattered over the new data
+axis — with explicitly computed target shardings). A mismatch without
+``elastic`` still refuses, because silently replaying a shard-written
+checkpoint onto a different layout is the §8 failure mode this module
+exists to prevent.
 """
 
 from __future__ import annotations
@@ -32,6 +61,7 @@ from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 # the ParallelPlan fields recorded in the manifest (impl/schedule knobs ride
@@ -62,11 +92,15 @@ def _index_json(index: Tuple[slice, ...], shape) -> List[List[int]]:
     return out
 
 
-def _leaf_shards(x) -> List[Tuple[List[List[int]], np.ndarray]]:
+def _leaf_shards(x, copy: bool = True) -> List[Tuple[List[List[int]], np.ndarray]]:
     """Unique (index, host copy) pairs for one leaf.
 
     jax.Arrays snapshot per addressable shard (replicas deduped by index);
     anything else (numpy, python scalars) is a single whole-array shard.
+    ``copy=True`` forces an owned host buffer — ``np.asarray`` of a CPU
+    shard is a zero-copy view of the device buffer, which a later donation
+    of that buffer would invalidate under the persist thread. Snapshots of a
+    manager-owned clone pass ``copy=False`` (the clone outlives the persist).
     """
     if isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer):
         if not x.is_fully_addressable:
@@ -82,7 +116,8 @@ def _leaf_shards(x) -> List[Tuple[List[List[int]], np.ndarray]]:
             idx = _index_json(tuple(sh.index), x.shape)
             key = tuple(map(tuple, idx))
             if key not in seen:
-                seen[key] = (idx, np.asarray(sh.data))
+                host = np.asarray(sh.data)
+                seen[key] = (idx, np.array(host, copy=True) if copy else host)
         return list(seen.values())
     arr = np.asarray(x)
     return [(_index_json(tuple(slice(0, d) for d in arr.shape), arr.shape),
@@ -105,42 +140,122 @@ def _checksum(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
 
+def _clone_shardings(leaves: List[Any]):
+    """Per-leaf out_shardings for the snapshot clone.
+
+    Committed arrays keep their own sharding. Uncommitted leaves (scalars on
+    the default device) are normalized onto the committed leaves' mesh,
+    replicated — a mixed device assignment would be rejected by jit, and a
+    mesh-replicated clone persists byte-identically (replicas dedup to one
+    full-coverage shard).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec  # noqa: PLC0415
+    meshes = {l.sharding.mesh for l in leaves
+              if getattr(l, "committed", False)
+              and isinstance(l.sharding, NamedSharding)}
+    mesh = meshes.pop() if len(meshes) == 1 else None
+    out = []
+    for l in leaves:
+        if getattr(l, "committed", False) or mesh is None:
+            out.append(l.sharding)
+        else:
+            out.append(NamedSharding(mesh, PartitionSpec()))
+    return out
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_persist: bool = True):
+    def __init__(self, directory: str, keep: int = 3,
+                 async_persist: bool = True, async_snapshot: bool = False):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_persist = async_persist
+        self.async_snapshot = async_snapshot
         self._pending: Optional[threading.Thread] = None
-        self.snapshot_seconds = 0.0
+        self._error: Optional[BaseException] = None
+        self._snapshot_ref: Any = None        # device clone kept alive
+        self._clone_cache: Dict[Tuple, Callable] = {}
+        self.snapshot_seconds = 0.0           # main-thread stall of last save
+        self.d2h_seconds = 0.0                # device->host copy (wherever it ran)
         self.persist_seconds = 0.0
 
     # -- save ---------------------------------------------------------------
 
+    def _cloner(self, leaves: List[Any]) -> Optional[List[Any]]:
+        """Device-side clone of the whole tree (the double buffer).
+
+        One jitted sharding-preserving copy per tree layout — a single async
+        dispatch, so the main-thread stall is sub-millisecond regardless of
+        state size. Returns the cloned leaves, or None when the leaf mix
+        can't be cloned on device (e.g. committed arrays pinned to
+        incompatible device sets) — the caller falls back to the blocking
+        host-copy snapshot.
+        """
+        jaxish = [isinstance(l, jax.Array) and not isinstance(l, jax.core.Tracer)
+                  for l in leaves]
+        arrs = [l for l, j in zip(leaves, jaxish) if j]
+        if not arrs:
+            return None
+        key = tuple((a.shape, str(a.dtype), a.sharding) for a in arrs)
+        fn = self._clone_cache.get(key)
+        if fn is None:
+            try:
+                jitted = jax.jit(lambda ls: [jnp.copy(l) for l in ls],
+                                 out_shardings=_clone_shardings(arrs))
+                jax.block_until_ready(jitted(arrs))   # compile + validate now
+            except Exception:
+                return None
+            fn = self._clone_cache[key] = jitted
+        cloned_arrs = fn(arrs)
+        it = iter(cloned_arrs)
+        # non-jax leaves (numpy, python scalars) are tiny: owned-copy inline
+        return [next(it) if j else np.array(np.asarray(l), copy=True)
+                for l, j in zip(leaves, jaxish)]
+
     def save(self, step: int, tree: Any, blocking: bool = False,
              plan=None, mesh=None) -> Path:
-        """Snapshot (stalls) then persist (async unless blocking).
+        """Snapshot then persist; returns the checkpoint path (sans suffix).
 
         The snapshot copies each leaf's unique *addressable shards* to host
-        (no full-array gather); ``plan``/``mesh`` record the layout axes in
-        the manifest so replay can verify compatibility.
+        (no full-array gather). With ``async_snapshot`` the main thread only
+        dispatches a device-side clone (double buffer) and the host copy
+        overlaps subsequent train steps; otherwise the host copy is the
+        stall. ``blocking=True`` forces everything inline. ``plan``/``mesh``
+        record the layout axes in the manifest so replay/reshard can route.
+        Raises any failure from the *previous* save's background work.
         """
+        self.wait()                                      # fence + raise errors
         t0 = time.time()
         named = _flatten_with_names(tree)
-        # snapshot phase: per-device shards, replicas deduped by index
-        host = [(n, tuple(np.shape(x)),
-                 str(getattr(x, "dtype", np.asarray(x).dtype)),
-                 _leaf_shards(x)) for n, x in named]
-        self.snapshot_seconds = time.time() - t0
+        names = [n for n, _ in named]
+        cloned = None
+        if self.async_snapshot and not blocking:
+            cloned = self._cloner([x for _, x in named])
+        if cloned is not None:
+            # double-buffer path: stall = flatten + clone dispatch only
+            self.snapshot_seconds = time.time() - t0
+            host = None
+        else:
+            host = [(n, _leaf_shards(x)) for n, x in named]
+            self.snapshot_seconds = time.time() - t0
 
         path = self.dir / f"ckpt_{step:08d}"
         mesh_axes = dict(mesh.shape) if mesh is not None else None
+        plan_meta = _plan_meta(plan)
+        shapes = [[int(d) for d in np.shape(x)] for _, x in named]
+        self._snapshot_ref = cloned                      # keep clone alive
 
-        def _persist():
+        def _snapshot_and_persist():
+            nonlocal host
+            if host is None:
+                t1 = time.time()
+                host = [(n, _leaf_shards(x, copy=False))
+                        for n, x in zip(names, cloned)]
+                self.d2h_seconds = time.time() - t1
             t1 = time.time()
             arrays = {}
             shard_meta = []
-            for i, (_, _, _, shards) in enumerate(host):
+            for i, (_, shards) in enumerate(host):
                 keys = []
                 for j, (idx, a) in enumerate(shards):
                     # single-shard leaves keep the legacy "a{i}" key
@@ -152,12 +267,12 @@ class CheckpointManager:
             np.savez(str(path) + ".npz", **arrays)
             manifest = {
                 "step": step,
-                "names": [n for n, _, _, _ in host],
+                "names": names,
                 "checksums": [m[0]["checksum"] for m in shard_meta],
-                "dtypes": [d for _, _, d, _ in host],
-                "shapes": [list(s) for _, s, _, _ in host],
+                "dtypes": [str(a.dtype) for _, ss in host for _, a in ss[:1]],
+                "shapes": shapes,
                 "shards": shard_meta,
-                "plan": _plan_meta(plan),
+                "plan": plan_meta,
                 "mesh_axes": mesh_axes,
                 "time": time.time(),
             }
@@ -165,18 +280,35 @@ class CheckpointManager:
             self.persist_seconds = time.time() - t1
             self._gc()
 
-        self.wait()                                      # one in flight max
-        if self.async_persist and not blocking:
-            self._pending = threading.Thread(target=_persist, daemon=True)
+        def _bg():
+            try:
+                _snapshot_and_persist()
+            except BaseException as e:  # surfaced at next save()/wait()
+                self._error = e
+            finally:
+                self._snapshot_ref = None                # free the clone
+
+        if (self.async_persist or cloned is not None) and not blocking:
+            self._pending = threading.Thread(target=_bg, daemon=True)
             self._pending.start()
         else:
-            _persist()
+            try:
+                _snapshot_and_persist()
+            finally:
+                self._snapshot_ref = None
         return path
 
     def wait(self):
+        """Completion fence: join in-flight snapshot/persist work and raise
+        any failure it hit (a persist that dies with its daemon thread would
+        otherwise be mistaken for a durable checkpoint)."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint persist failed: {err!r}") from err
 
     def _gc(self):
         ckpts = sorted(self.dir.glob("ckpt_*.json"))
@@ -203,29 +335,42 @@ class CheckpointManager:
         path = self.dir / f"ckpt_{step:08d}"
         return json.loads(path.with_suffix(".json").read_text())
 
-    def check_plan(self, plan, step: Optional[int] = None) -> None:
-        """Raise ValueError if the checkpoint's recorded ParallelPlan axes
-        disagree with ``plan`` — replaying onto a different cp/tp/pp layout
-        silently reshards, which is exactly the failure mode ft/recovery
-        must refuse."""
-        recorded = self.manifest(step).get("plan")
-        if recorded is None or plan is None:
-            return
-        want = _plan_meta(plan)
-        diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
-                 if k in recorded and k in want and recorded[k] != want[k]}
-        if diffs:
-            raise ValueError(
-                f"checkpoint layout mismatch (recorded != requested): {diffs}")
+    def check_plan(self, plan, step: Optional[int] = None, *,
+                   mesh=None, elastic: bool = False) -> str:
+        """Route a restore: ``"replay"`` or ``"reshard"``.
 
-    def restore(self, tree_like: Any, step: Optional[int] = None,
-                verify: bool = True) -> Tuple[int, Any]:
-        """Restore into the structure of ``tree_like``; returns (step, tree).
-
-        Shards are reassembled by their recorded index slices; leaves whose
-        ``tree_like`` twin carries a sharding are re-placed with it
-        (device_put), so a cp/tp-sharded state restores shard-to-shard.
+        Compares the checkpoint's recorded ParallelPlan layout axes (and,
+        when ``mesh`` is given, the mesh axis sizes) against the requested
+        ones. Matching layouts replay shard-to-shard. Differing layouts
+        return ``"reshard"`` when ``elastic=True`` — take
+        :meth:`restore_resharded` — and raise ``ValueError`` otherwise:
+        replaying a shard-written checkpoint onto a different cp/tp/dp
+        layout silently reshards, which is exactly the failure mode a
+        non-elastic ft/recovery must refuse.
         """
+        man = self.manifest(step)
+        recorded = man.get("plan")
+        diffs: Dict[str, Tuple[Any, Any]] = {}
+        if recorded is not None and plan is not None:
+            want = _plan_meta(plan)
+            diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
+                     if k in recorded and k in want and recorded[k] != want[k]}
+        rec_mesh = man.get("mesh_axes")
+        if mesh is not None and rec_mesh is not None:
+            want_mesh = {k: int(v) for k, v in dict(mesh.shape).items()}
+            if {k: int(v) for k, v in rec_mesh.items()} != want_mesh:
+                diffs["mesh_axes"] = (rec_mesh, want_mesh)
+        if not diffs:
+            return "replay"
+        if elastic:
+            return "reshard"
+        raise ValueError(
+            f"checkpoint layout mismatch (recorded != requested): {diffs}")
+
+    def _load_full(self, step: Optional[int], verify: bool
+                   ) -> Tuple[int, Dict[str, Any], List[np.ndarray]]:
+        """Reassemble every leaf into a full host array from its recorded
+        shard slices; returns (step, manifest, arrays)."""
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -239,9 +384,9 @@ class CheckpointManager:
             shard_meta = [[{"key": f"a{i}", "index": None, "checksum": c}]
                           for i, c in enumerate(manifest["checksums"])]
         arrays = []
-        for i, (metas, shape, dt, n) in enumerate(zip(
+        for metas, shape, dt, n in zip(
                 shard_meta, manifest["shapes"], manifest["dtypes"],
-                manifest["names"])):
+                manifest["names"]):
             if verify:
                 for m in metas:
                     if _checksum(data[m["key"]]) != m["checksum"]:
@@ -256,15 +401,65 @@ class CheckpointManager:
                 sl = tuple(slice(a, b) for a, b in m["index"])
                 full[sl] = data[m["key"]]
             arrays.append(full)
+        return step, manifest, arrays
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                verify: bool = True) -> Tuple[int, Any]:
+        """Restore into the structure of ``tree_like``; returns (step, tree).
+
+        Shards are reassembled by their recorded index slices; leaves whose
+        ``tree_like`` twin carries a sharding are re-placed with it
+        (device_put), so a cp/tp-sharded state restores shard-to-shard.
+        """
+        step, manifest, arrays = self._load_full(step, verify)
         named = _flatten_with_names(tree_like)
         assert [n for n, _ in named] == manifest["names"], \
             "checkpoint tree structure mismatch"
         leaves = []
         for a, (_, l) in zip(arrays, named):
             arr = jax.numpy.asarray(a, dtype=l.dtype)
-            sharding = getattr(l, "sharding", None)
-            if sharding is not None and isinstance(l, jax.Array):
-                arr = jax.device_put(arr, sharding)
+            # re-place committed leaves on their recorded layout; an
+            # uncommitted leaf (e.g. the scalar opt step) stays uncommitted —
+            # committing it to one device would conflict with mesh-committed
+            # siblings inside the jitted step
+            if isinstance(l, jax.Array) and getattr(l, "committed", False):
+                arr = jax.device_put(arr, l.sharding)
             leaves.append(arr)
         treedef = jax.tree_util.tree_structure(tree_like)
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_resharded(self, tree_like: Any, shardings: Any = None,
+                          step: Optional[int] = None, verify: bool = True
+                          ) -> Tuple[int, Any]:
+        """Elastic restore onto a *different* mesh layout (survey §8.3.2).
+
+        Full arrays are reassembled from the manifest's global-index shard
+        slices — written on whatever mesh the checkpoint came from — and
+        every leaf is re-sliced onto the target layout: ``shardings`` is a
+        pytree (same structure as ``tree_like``) of target shardings, e.g.
+        :func:`repro.core.sharding.train_state_shardings` under the new
+        plan/mesh, which re-scatters the ZeRO-1 optimizer moment shards over
+        the new data axis and re-shards tp/cp params onto the new model
+        axes. Leaves whose ``shardings`` entry is None fall back to the
+        ``tree_like`` twin's own sharding (matching :meth:`restore`).
+        Returns (step, tree) with every leaf device_put on the target.
+        """
+        step, manifest, arrays = self._load_full(step, verify)
+        named = _flatten_with_names(tree_like)
+        assert [n for n, _ in named] == manifest["names"], \
+            "checkpoint tree structure mismatch"
+        treedef = jax.tree_util.tree_structure(tree_like)
+        if shardings is None:
+            target = [None] * len(named)
+        else:
+            target = treedef.flatten_up_to(shardings)
+        leaves = []
+        for a, (_, l), s in zip(arrays, named, target):
+            arr = jax.numpy.asarray(a, dtype=getattr(l, "dtype", None) or a.dtype)
+            if s is None and isinstance(l, jax.Array) \
+                    and getattr(l, "committed", False):
+                s = l.sharding      # same committed-only rule as restore()
+            if s is not None:
+                arr = jax.device_put(arr, s)
+            leaves.append(arr)
         return step, jax.tree_util.tree_unflatten(treedef, leaves)

@@ -13,6 +13,7 @@ from .config import (
     ModelConfig,
     MoEConfig,
     ParallelPlan,
+    RecoveryPolicy,
     SSMConfig,
 )
 from .registry import ARCH_IDS, all_configs, get_config, get_smoke_config, register
@@ -26,6 +27,7 @@ __all__ = [
     "ModelConfig",
     "MoEConfig",
     "ParallelPlan",
+    "RecoveryPolicy",
     "SSMConfig",
     "ARCH_IDS",
     "all_configs",

@@ -362,6 +362,64 @@ class ParallelPlan:
 
 
 # ---------------------------------------------------------------------------
+# Recovery policy (survey §8): what ft/recovery.run_with_recovery does per
+# anomaly kind reported by ft/anomaly.Monitor.
+
+RECOVERY_ACTIONS = ("rollback", "lr_rescue", "remesh", "ignore")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Anomaly -> action table for the recovery driver (survey §8.3).
+
+    Actions:
+
+    - ``"rollback"``: restore the latest checkpoint and replay (the
+      deterministic pipeline makes the replay bit-faithful);
+    - ``"lr_rescue"``: rollback, then damp the optimizer through the bad
+      region — via the driver's ``rescue_step`` (LR scaled by
+      ``rescue_lr_scale``) when one was built, else by skipping the
+      offending batch (recorded as a nan in the loss trace);
+    - ``"remesh"``: elastic recovery from host loss (survey §8.3.2) —
+      rebuild the mesh at reduced size via the driver's ``remesh`` hook and
+      :meth:`CheckpointManager.restore_resharded` the state (params + the
+      ZeRO-1 moments, re-scattered over the new data axis), then continue
+      on the shrunken cluster;
+    - ``"ignore"``: log the anomaly and keep going.
+    """
+    nan: str = "rollback"            # non-finite loss/grad-norm: numerical
+                                     # failure — replay is the only safe move
+    spike: str = "rollback"          # first loss spike at a step: assume
+                                     # transient (bad host, bit flip), replay
+    repeated_spike: str = "lr_rescue"  # the same step spikes again after a
+                                     # rollback: replay alone is a loop —
+                                     # escalate to LR-rescue / skip-batch
+                                     # (PaLM-style spike handling)
+    hang: str = "ignore"             # slow/hung step: "remesh" shrinks the
+                                     # mesh and reshard-restores (needs the
+                                     # driver's remesh hook); default ignore
+                                     # keeps the watchdog advisory-only
+    max_restores: int = 3            # give up after this many restores
+    rescue_lr_scale: float = 0.1     # LR multiplier while an lr_rescue step
+                                     # replays the offending step
+    elastic: bool = True             # allow cross-layout restore routing
+                                     # (check_plan returns "reshard" instead
+                                     # of refusing on a layout change)
+
+    def validate(self) -> None:
+        for knob in ("nan", "spike", "repeated_spike", "hang"):
+            if getattr(self, knob) not in RECOVERY_ACTIONS:
+                raise ValueError(
+                    f"{knob} action must be one of {RECOVERY_ACTIONS}, "
+                    f"got {getattr(self, knob)!r}")
+        if self.max_restores < 0:
+            raise ValueError(f"max_restores must be >= 0, got {self.max_restores}")
+        if not 0.0 < self.rescue_lr_scale <= 1.0:
+            raise ValueError(
+                f"rescue_lr_scale must be in (0, 1], got {self.rescue_lr_scale}")
+
+
+# ---------------------------------------------------------------------------
 # Input shapes assigned to this paper (fixed public pool).
 
 @dataclasses.dataclass(frozen=True)

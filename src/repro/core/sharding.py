@@ -363,6 +363,34 @@ def opt_state_specs(pspecs: Any, params: Any, plan: ParallelPlan, mesh: Mesh) ->
     return jax.tree_util.tree_map(one, pspecs, params)
 
 
+def train_state_specs(state: Any, cfg: ModelConfig, plan: ParallelPlan,
+                      mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a whole ``train.TrainState`` (params + AdamW
+    moments), matching what the jitted step's sharding constraints produce.
+
+    This is the layout contract an elastic restore re-slices onto: params get
+    :func:`param_specs`, the fp32 moments get :func:`opt_state_specs` (ZeRO-1
+    scatters them over ``data``), the step counter replicates. Duck-typed on
+    the NamedTuple shape ``state.params`` / ``state.opt.{step, mu, nu}`` so
+    core stays import-independent of the train layer.
+    """
+    pspecs = param_specs(state.params, cfg, plan, mesh)
+    ospecs = opt_state_specs(pspecs, state.params, plan, mesh)
+    return state._replace(
+        params=pspecs,
+        opt=state.opt._replace(step=P(), mu=ospecs, nu=ospecs))
+
+
+def train_state_shardings(state: Any, cfg: ModelConfig, plan: ParallelPlan,
+                          mesh: Mesh) -> Any:
+    """:func:`train_state_specs` as concrete ``NamedSharding``s — the
+    ``shardings`` argument of ``CheckpointManager.restore_resharded``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        train_state_specs(state, cfg, plan, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
 def bytes_per_device(params: Any, shardings: Any) -> int:
     """Analytic parameter bytes resident per device under the given shardings."""
     total = 0

@@ -1,4 +1,6 @@
+from repro.core.config import RecoveryPolicy
 from .anomaly import Anomaly, Monitor
-from .recovery import RunReport, run_with_recovery
+from .recovery import RemeshSpec, RunReport, run_with_recovery
 
-__all__ = ["Anomaly", "Monitor", "RunReport", "run_with_recovery"]
+__all__ = ["Anomaly", "Monitor", "RecoveryPolicy", "RemeshSpec",
+           "RunReport", "run_with_recovery"]

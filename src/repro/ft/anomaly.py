@@ -30,11 +30,15 @@ class Anomaly:
 
 class Monitor:
     def __init__(self, window: int = 32, spike_mads: float = 10.0,
-                 hang_factor: float = 5.0, min_history: int = 8):
+                 hang_factor: float = 5.0, min_history: int = 8,
+                 hang_min_seconds: float = 1e-3):
         self.window = window
         self.spike_mads = spike_mads
         self.hang_factor = hang_factor
         self.min_history = min_history
+        # absolute floor below which a slow step is never a "hang" — with
+        # sub-ms steps the relative test alone would flag scheduler jitter
+        self.hang_min_seconds = hang_min_seconds
         self.losses: Deque[float] = deque(maxlen=window)
         self.times: Deque[float] = deque(maxlen=window)
         self.anomalies: List[Anomaly] = []
@@ -64,12 +68,16 @@ class Monitor:
 
         if self._last_beat is not None:
             dt = now - self._last_beat
+            hung = False
             if len(self.times) >= self.min_history:
                 med_t = self._median(self.times)
-                if dt > self.hang_factor * med_t and dt > 1e-3:
+                if dt > self.hang_factor * med_t and dt > self.hang_min_seconds:
+                    hung = True
                     out = out or Anomaly(
                         "hang", step, f"step_time={dt:.3f}s median={med_t:.3f}s")
-            self.times.append(dt)
+            if not hung:
+                self.times.append(dt)    # only healthy wall-times enter the
+                                         # window, mirroring the loss window
         self._last_beat = now
 
         if out is None and math.isfinite(loss):
@@ -77,3 +85,8 @@ class Monitor:
         if out:
             self.anomalies.append(out)
         return out
+
+    def reset_heartbeat(self, now: Optional[float] = None) -> None:
+        """Restart the hang watchdog clock (call after a checkpoint restore —
+        restore wall-time is not a step time and must not trip a hang)."""
+        self._last_beat = time.time() if now is None else now

@@ -1,10 +1,30 @@
-"""Checkpoint-based recovery driver (survey §8.3): wraps a training loop with
-detect -> rollback -> replay semantics.
+"""Anomaly-driven recovery driver (survey §8.3): wraps a training loop with a
+detect -> policy -> recover state machine.
 
-On an anomaly the driver restores the latest checkpoint and *replays* from the
-restored step. The deterministic data pipeline (batch = f(arch, step)) makes
-replay bit-faithful — the property test in tests/test_ft.py asserts the
-recovered run matches an uninterrupted one.
+Each anomaly kind from :class:`repro.ft.anomaly.Monitor` maps through a
+:class:`repro.core.RecoveryPolicy` table to an action:
+
+- **rollback** — restore the latest checkpoint and replay. The deterministic
+  data pipeline (batch = f(arch, step)) makes replay bit-faithful; the
+  property test asserts a recovered run matches an uninterrupted one.
+- **lr_rescue** — a spike that *recurs at the same step* after a rollback
+  means replay alone loops; roll back and damp the optimizer through the bad
+  step instead (PaLM-style spike handling): the driver's ``rescue_step`` (a
+  twin train step with LR × ``rescue_lr_scale``) when provided, else the
+  offending batch is skipped outright (its loss slot records ``nan``).
+  The decision is sticky — every later replay over that step takes the same
+  path, keeping the run deterministic across rollbacks.
+- **remesh** — elastic recovery from host loss / hang (survey §8.3.2): the
+  ``remesh`` hook rebuilds the world at reduced size (new mesh, re-jitted
+  step, state template on the new layout) and the driver reshard-restores
+  the latest checkpoint onto it — params and ZeRO-1 optimizer moments are
+  reassembled from the old mesh's shard slices and re-scattered over the
+  new data axis — then continues on the shrunken cluster.
+- **ignore** — log and continue (the hang watchdog's default, so slow-step
+  jitter never rolls back a healthy run unless asked to).
+
+After every restore the Monitor's heartbeat is reset: restore wall-time is
+not a step time and must not trip a false hang.
 """
 
 from __future__ import annotations
@@ -13,7 +33,26 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.checkpoint.store import CheckpointManager
+from repro.core.config import RecoveryPolicy
 from .anomaly import Anomaly, Monitor
+
+
+@dataclasses.dataclass
+class RemeshSpec:
+    """The post-shrink world a ``remesh`` hook hands back to the driver.
+
+    ``state_template`` must match the checkpoint's tree structure and carry
+    the *target* leaf shardings (build it on the new mesh);
+    ``shardings`` optionally overrides them per leaf — needed when the
+    template's ZeRO-1 moments are freshly-initialized (replicated) but the
+    checkpointed ones must land re-scattered over the new data axis.
+    """
+    train_step: Callable[[Any, Dict], Tuple[Any, Dict]]
+    state_template: Any
+    shardings: Any = None
+    plan: Any = None
+    mesh: Any = None
+    rescue_step: Optional[Callable[[Any, Dict], Tuple[Any, Dict]]] = None
 
 
 @dataclasses.dataclass
@@ -22,6 +61,9 @@ class RunReport:
     anomalies: List[Anomaly]
     restores: int
     losses: List[float]
+    remeshes: int = 0
+    # (step, anomaly kind, action taken) — the policy audit trail
+    actions: List[Tuple[int, str, str]] = dataclasses.field(default_factory=list)
 
 
 def run_with_recovery(
@@ -36,43 +78,111 @@ def run_with_recovery(
     fault_injector: Optional[Callable[[int, Any], Any]] = None,
     plan=None,
     mesh=None,
+    policy: Optional[RecoveryPolicy] = None,
+    rescue_step: Optional[Callable[[Any, Dict], Tuple[Any, Dict]]] = None,
+    remesh: Optional[Callable[[], RemeshSpec]] = None,
+    resume: bool = False,
 ) -> Tuple[Any, RunReport]:
-    """Run ``n_steps`` with periodic checkpointing and anomaly-driven rollback.
+    """Run ``n_steps`` with periodic checkpointing and anomaly-driven recovery.
 
     ``fault_injector(step, state) -> state`` lets tests corrupt the run.
-    ``plan``/``mesh`` stamp the ParallelPlan axes into every checkpoint's
-    manifest (store.py records them), and each rollback first verifies the
-    checkpoint was written under the *same* cp/tp/pp layout — replaying a
-    shard-written checkpoint onto a different mesh silently reshards, so the
-    driver refuses instead. Restore itself is shard-aware: the restored
-    leaves are re-placed with the live state's shardings.
+    ``plan``/``mesh`` stamp the layout axes into every checkpoint manifest;
+    each restore routes through :meth:`CheckpointManager.check_plan` —
+    same-layout checkpoints replay shard-to-shard, and with
+    ``policy.elastic`` a layout change takes the reshard path instead of
+    refusing. ``remesh()`` is the elastic hook: called on a hang when
+    ``policy.hang == "remesh"``, it returns the shrunken-cluster
+    :class:`RemeshSpec` the run continues under. ``resume=True`` picks up
+    from the latest checkpoint already in ``ckpt`` (resharding onto
+    ``state``'s layout if it was written on a different one) instead of
+    saving a fresh step-0 checkpoint.
     """
     monitor = monitor or Monitor()
+    policy = policy or RecoveryPolicy(max_restores=max_restores)
+    policy.validate()
     losses: List[float] = []
+    actions: List[Tuple[int, str, str]] = []
     restores = 0
+    remeshes = 0
+    spike_counts: Dict[int, int] = {}
+    rescue_mode: Dict[int, str] = {}   # step -> "rescue" | "skip", sticky
     step = 0
-    ckpt.save(step, state, blocking=True, plan=plan, mesh=mesh)
+
+    def _restore(template, shardings=None, the_plan=None, the_mesh=None):
+        route = "replay"
+        if the_plan is not None or the_mesh is not None:
+            route = ckpt.check_plan(the_plan, mesh=the_mesh,
+                                    elastic=policy.elastic)
+        if route == "reshard":
+            s, tree = ckpt.restore_resharded(template, shardings=shardings)
+        else:
+            s, tree = ckpt.restore(template)
+        monitor.reset_heartbeat()      # restore wall-time is not a step time
+        return s, tree
+
+    if resume and ckpt.latest_step() is not None:
+        step, state = _restore(state, the_plan=plan, the_mesh=mesh)
+        losses = [float("nan")] * step     # pre-resume slots are unknown
+    else:
+        ckpt.save(step, state, blocking=True, plan=plan, mesh=mesh)
 
     while step < n_steps:
+        mode = rescue_mode.get(step)
+        if mode == "skip":
+            losses.append(float("nan"))    # batch dropped by lr_rescue policy
+            step += 1
+            if step % ckpt_every == 0:
+                ckpt.save(step, state, plan=plan, mesh=mesh)
+            continue
+
         cur = state
         if fault_injector is not None:
             cur = fault_injector(step, cur)
-        new_state, metrics = train_step(cur, get_batch(step))
+        fn = rescue_step if (mode == "rescue" and rescue_step) else train_step
+        new_state, metrics = fn(cur, get_batch(step))
         loss = float(metrics["loss"])
         gnorm = float(metrics.get("grad_norm", 0.0))
         anomaly = monitor.record(step, loss, gnorm)
+        if anomaly is not None and mode == "rescue" and anomaly.kind == "spike":
+            anomaly = None                 # the rescue step owns this spike
 
-        if anomaly is not None and anomaly.kind in ("nan", "spike"):
-            if restores >= max_restores:
-                raise RuntimeError(
-                    f"giving up after {restores} restores: {anomaly}")
-            if plan is not None:
-                ckpt.check_plan(plan)          # refuse cross-layout replay
-            restore_step, state = ckpt.restore(state)
-            step = restore_step
-            restores += 1
-            del losses[restore_step:]
-            continue
+        if anomaly is not None:
+            if anomaly.kind == "spike":
+                spike_counts[step] = spike_counts.get(step, 0) + 1
+                action = (policy.spike if spike_counts[step] == 1
+                          else policy.repeated_spike)
+            else:
+                action = getattr(policy, anomaly.kind)
+            if action == "remesh" and (anomaly.kind != "hang" or remesh is None):
+                action = "ignore"          # no hook / not a hang: advisory only
+            actions.append((step, anomaly.kind, action))
+
+            if action in ("rollback", "lr_rescue"):
+                if restores >= policy.max_restores:
+                    raise RuntimeError(
+                        f"giving up after {restores} restores: {anomaly}")
+                if action == "lr_rescue":
+                    rescue_mode[step] = "rescue" if rescue_step else "skip"
+                step, state = _restore(state, the_plan=plan, the_mesh=mesh)
+                restores += 1
+                del losses[step:]
+                continue
+            if action == "remesh":
+                if restores >= policy.max_restores:
+                    raise RuntimeError(
+                        f"giving up after {restores} restores: {anomaly}")
+                spec = remesh()
+                step, state = _restore(spec.state_template, spec.shardings,
+                                       spec.plan, spec.mesh)
+                train_step = spec.train_step
+                plan, mesh = spec.plan, spec.mesh
+                if spec.rescue_step is not None:
+                    rescue_step = spec.rescue_step
+                restores += 1
+                remeshes += 1
+                del losses[step:]
+                continue
+            # "ignore": fall through and accept the step
 
         state = new_state
         losses.append(loss)
@@ -81,4 +191,5 @@ def run_with_recovery(
             ckpt.save(step, state, plan=plan, mesh=mesh)
 
     ckpt.wait()
-    return state, RunReport(step, monitor.anomalies, restores, losses)
+    return state, RunReport(step, monitor.anomalies, restores, losses,
+                            remeshes, actions)

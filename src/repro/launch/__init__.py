@@ -1,3 +1,4 @@
-from .mesh import batch_axes_for, make_local_mesh, make_production_mesh
+from .mesh import batch_axes_for, make_local_mesh, make_production_mesh, shrink_mesh
 
-__all__ = ["batch_axes_for", "make_local_mesh", "make_production_mesh"]
+__all__ = ["batch_axes_for", "make_local_mesh", "make_production_mesh",
+           "shrink_mesh"]

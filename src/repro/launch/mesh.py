@@ -44,6 +44,26 @@ def make_local_mesh(shape: Tuple[int, ...] = None, axes: Tuple[str, ...] = None)
     return jax.make_mesh(shape, axes)
 
 
+def shrink_mesh(mesh, axis: str, lost: int = 1):
+    """Rebuild ``mesh`` after simulated host loss: drop ``lost`` slices of
+    ``axis`` (survey §8.3.2 elastic recovery — resume on fewer hosts).
+
+    Keeps the surviving devices and every other axis intact, e.g. a 2×2
+    ("data", "model") mesh losing one data slice becomes 1×2. The caller
+    re-jits its step and reshard-restores onto the result.
+    """
+    from jax.sharding import Mesh  # noqa: PLC0415
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no axis {axis!r}: {dict(mesh.shape)}")
+    size = mesh.shape[axis]
+    if lost >= size:
+        raise ValueError(f"cannot drop {lost} of {size} {axis!r} slices")
+    dim = mesh.axis_names.index(axis)
+    keep = [slice(None)] * mesh.devices.ndim
+    keep[dim] = slice(0, size - lost)
+    return Mesh(mesh.devices[tuple(keep)], mesh.axis_names)
+
+
 def batch_axes_for(mesh, global_batch: int, pp: int = 1,
                    dp_over_model: bool = False) -> Tuple[str, ...]:
     """Mesh axes to shard the batch over, largest-first, divisibility-checked.

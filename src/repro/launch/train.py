@@ -7,8 +7,11 @@ path drives a TPU slice — the mesh is the only difference):
         --steps 50 --batch 8 --seq 128
 
 Integrates the full substrate: synthetic data pipeline, sharded AdamW + ZeRO-1,
-remat, checkpointing with snapshot-stall persist, and anomaly monitoring with
-rollback recovery (survey §8).
+remat, checkpointing (async persist, optional double-buffered snapshots), and
+anomaly-driven recovery (survey §8): NaN/spike -> rollback-and-replay,
+repeated spike -> LR-rescue, hang -> advisory or elastic remesh. ``--resume``
+continues from the latest checkpoint in ``--ckpt-dir`` — including one
+written on a *different* mesh layout (elastic reshard-restore, §8.3.2).
 """
 
 from __future__ import annotations
@@ -20,8 +23,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import ARCH_IDS, InputShape, ParallelPlan
-from repro.core.config import Family
+from repro.core import ARCH_IDS, InputShape, ParallelPlan, RecoveryPolicy
+from repro.core.config import RECOVERY_ACTIONS, Family
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticDataset
 from repro.ft import Monitor, run_with_recovery
@@ -47,6 +50,37 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in --ckpt-dir "
+                         "instead of starting fresh; a checkpoint written on "
+                         "a different mesh layout is reshard-restored onto "
+                         "the current one (elastic recovery, survey §8.3.2)")
+    ap.add_argument("--async-snapshot", action="store_true",
+                    help="double-buffer the device->host checkpoint snapshot "
+                         "(survey §8.3.1): save() only dispatches a device-"
+                         "side clone and the copy+write overlap later steps, "
+                         "at the cost of transiently one extra state copy in "
+                         "device memory")
+    ap.add_argument("--on-nan", default="rollback", choices=RECOVERY_ACTIONS,
+                    help="recovery action for a non-finite loss/grad-norm")
+    ap.add_argument("--on-spike", default="rollback", choices=RECOVERY_ACTIONS,
+                    help="recovery action for a first loss spike at a step")
+    ap.add_argument("--on-repeated-spike", default="lr_rescue",
+                    choices=RECOVERY_ACTIONS,
+                    help="action when the same step spikes again after a "
+                         "rollback (replay alone would loop): lr_rescue "
+                         "replays it with LR x --rescue-lr-scale")
+    ap.add_argument("--on-hang", default="ignore", choices=RECOVERY_ACTIONS,
+                    help="action for a hung/straggling step (wall-time >> "
+                         "trailing median); 'ignore' logs only")
+    ap.add_argument("--rescue-lr-scale", type=float, default=0.1,
+                    help="LR multiplier used by the lr_rescue policy while "
+                         "replaying the offending step")
+    ap.add_argument("--max-restores", type=int, default=3,
+                    help="give up after this many checkpoint restores")
+    ap.add_argument("--simulate-hang-at", type=int, default=-1,
+                    help="fault injection for demos/tests: sleep 2s before "
+                         "this step so the hang watchdog fires (-1 = off)")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, "train_4k", smoke=args.smoke)
@@ -62,7 +96,7 @@ def main() -> None:
 
     hyper = Hyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
                   total_steps=args.steps)
-    state = init_train_state(model, jax.random.PRNGKey(0))
+    state = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
     n_params = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"[train] arch={cfg.arch_id} params={n_params/1e6:.1f}M "
           f"devices={n_dev} batch={args.batch} seq={args.seq}")
@@ -70,32 +104,49 @@ def main() -> None:
     step_fn = jax.jit(make_train_step(model, plan, hyper, mesh=mesh),
                       donate_argnums=(0,))
     ds = SyntheticDataset(cfg, shape)
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2,
+                             async_snapshot=args.async_snapshot)
     monitor = Monitor()
+    policy = RecoveryPolicy(
+        nan=args.on_nan, spike=args.on_spike,
+        repeated_spike=args.on_repeated_spike, hang=args.on_hang,
+        max_restores=args.max_restores,
+        rescue_lr_scale=args.rescue_lr_scale)
+    rescue_fn = None
+    if "lr_rescue" in (policy.spike, policy.repeated_spike,
+                       policy.nan, policy.hang):
+        rescue_hyper = hyper._replace(peak_lr=args.lr * args.rescue_lr_scale)
+        rescue_fn = jax.jit(make_train_step(model, plan, rescue_hyper,
+                                            mesh=mesh))
 
     t_start = time.time()
-    last = t_start
 
     def get_batch(step: int):
         return {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
 
-    def logged_step(state, batch):
-        nonlocal last
-        state, metrics = step_fn(state, batch)
-        return state, metrics
+    def injector(step, st):
+        if step == args.simulate_hang_at:
+            time.sleep(2.0)
+        return st
 
     state, report = run_with_recovery(
-        state, logged_step, get_batch, args.steps, ckpt, monitor,
-        ckpt_every=args.ckpt_every)
+        state, step_fn, get_batch, args.steps, ckpt, monitor,
+        ckpt_every=args.ckpt_every, plan=plan, mesh=mesh, policy=policy,
+        rescue_step=rescue_fn, resume=args.resume,
+        fault_injector=injector if args.simulate_hang_at >= 0 else None)
 
     dt = time.time() - t_start
     tokens = args.steps * args.batch * args.seq
     print(f"[train] {args.steps} steps in {dt:.1f}s "
           f"({tokens/dt:.0f} tok/s), loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f}, anomalies={len(report.anomalies)}, "
-          f"restores={report.restores}")
+          f"restores={report.restores}, remeshes={report.remeshes}")
+    for step, kind, action in report.actions:
+        print(f"[train]   step {step}: {kind} -> {action}")
     print(f"[train] ckpt snapshot {ckpt.snapshot_seconds*1e3:.1f}ms "
-          f"persist {ckpt.persist_seconds*1e3:.1f}ms (async)")
+          f"persist {ckpt.persist_seconds*1e3:.1f}ms "
+          f"({'double-buffered' if args.async_snapshot else 'blocking'} "
+          f"snapshot, async persist)")
 
 
 if __name__ == "__main__":

@@ -29,12 +29,24 @@ class AdamWState(NamedTuple):
     nu: Any                  # second moment
 
 
-def adamw_init(params: Any) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+def adamw_init(params: Any, *, mesh: Mesh = None,
+               specs: Any = None) -> AdamWState:
+    """Zero moments; with ``mesh`` + ``specs`` (PartitionSpecs from
+    ``core.sharding.opt_state_specs``) they are *born* on the ZeRO-1 layout —
+    data-scattered from step 0 instead of waiting for the first sharded
+    update to constrain them. An elastic restore needs this: the state
+    template's moment leaves must already carry the target shardings."""
+    if mesh is not None and specs is not None:
+        zeros = lambda p, s: jnp.zeros(p.shape, jnp.float32,
+                                       device=NamedSharding(mesh, s))
+        moments = lambda: jax.tree.map(zeros, params, specs)
+    else:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        moments = lambda: jax.tree.map(zeros, params)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
-        mu=jax.tree.map(zeros, params),
-        nu=jax.tree.map(zeros, params),
+        mu=moments(),
+        nu=moments(),
     )
 
 

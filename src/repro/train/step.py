@@ -57,9 +57,22 @@ class Hyper(NamedTuple):
     z_loss: float = 1e-4
 
 
-def init_train_state(model: Model, rng) -> TrainState:
+def init_train_state(model: Model, rng, mesh: Optional[Mesh] = None,
+                     plan: Optional[ParallelPlan] = None) -> TrainState:
+    """Fresh state; with ``mesh`` + ``plan`` the params are placed on their
+    plan layout and the AdamW moments are born on the ZeRO-1 data-scattered
+    layout (``core.sharding.opt_state_specs``) — the layouts the jitted step
+    would otherwise impose on first use, needed up front when the state
+    serves as an elastic-restore template."""
     params = model.init(rng)
-    return TrainState(params, adamw_init(params))
+    if mesh is None or plan is None:
+        return TrainState(params, adamw_init(params))
+    pspecs = shardlib.param_specs(params, model.cfg, plan, mesh)
+    params = jax.tree.map(
+        lambda p, s: jax.device_put(p, jax.sharding.NamedSharding(mesh, s)),
+        params, pspecs)
+    ospecs = shardlib.opt_state_specs(pspecs, params, plan, mesh)
+    return TrainState(params, adamw_init(params, mesh=mesh, specs=ospecs))
 
 
 def make_loss_fn(model: Model, hyper: Hyper) -> Callable:
