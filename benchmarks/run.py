@@ -707,6 +707,52 @@ def bench_fault_tolerance(tmp="/tmp/repro_bench_ft"):
 
 
 # ---------------------------------------------------------------------------
+# survey §8.2 (SDC defense: integrity-audit overhead sweep)
+
+def bench_integrity():
+    """Step-time overhead of ``plan.integrity = "audit"`` per family — the
+    exact bitwise param/grad checksum + cross-replica compare the SDC defense
+    adds to every step (survey §8.2: algorithm-level checks vs full redundant
+    compute). Asserts the audited step stays within 2× of the plain step on
+    every family — the audit is one elementwise bitcast+sum pass and two
+    scalar collectives, so anything worse is a regression in the checksum
+    path itself (single host device: the collective part is free here, the
+    checksum pass is what's measured)."""
+    shape = InputShape("b", 64, 8, "train")
+    fams = [
+        ("dense", _tiny_cfg(n_layers=4)),
+        ("moe", _tiny_cfg(n_layers=4, family=Family.MOE, d_ff=0,
+                          moe=MoEConfig(num_experts=4, top_k=2, d_expert=128))),
+        ("ssm", _tiny_cfg(n_layers=4, n_heads=0, n_kv_heads=0, d_ff=0,
+                          family=Family.SSM,
+                          ssm=SSMConfig(d_state=16, head_dim=32, expand=2))),
+    ]
+    toks = shape.global_batch * shape.seq_len
+    for fam_name, cfg in fams:
+        ds = SyntheticDataset(cfg, shape)
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+        times = {}
+        for mode in ("off", "audit"):
+            plan = ParallelPlan(remat="none", compute_dtype="float32",
+                                integrity=mode)
+            model = build_model(cfg, plan)
+            state = init_train_state(model, jax.random.PRNGKey(0))
+            step = jax.jit(make_train_step(model, plan, Hyper(total_steps=10)))
+            if mode == "audit":                  # the audit must be wired in
+                _, metrics = step(state, batch)
+                assert float(metrics["integrity_div"]) == 0.0, metrics
+            times[mode] = timeit(step, state, batch, warmup=1, iters=3)
+            emit(f"integrity.{fam_name}.{mode}", times[mode],
+                 f"tokens_per_s={toks/(times[mode]/1e6):.0f}")
+        ratio = times["audit"] / times["off"]
+        assert ratio < 2.0, (
+            f"integrity audit overhead {ratio:.2f}x on {fam_name} "
+            f"exceeds the 2x bound")
+        emit(f"integrity.{fam_name}.overhead", times["audit"] - times["off"],
+             f"ratio={ratio:.3f}x;bound=2.0x")
+
+
+# ---------------------------------------------------------------------------
 # survey §4.1.4 (long-context decode path)
 
 def bench_decode():
@@ -735,6 +781,7 @@ BENCHES = {
     "trainstep": bench_trainstep,
     "ckpt": bench_checkpoint,
     "ft": bench_fault_tolerance,
+    "integrity": bench_integrity,
     "decode": bench_decode,
 }
 
@@ -941,6 +988,53 @@ print("ELASTIC_OK", flush=True)
                 warmup=0, iters=1)
     emit("quick.ft.elastic", us,
          "mesh=2x2_to_1x2;remesh=1;losses_bitmatch_reference=True")
+
+    # chaos smoke: a dropped shard write corrupts the newest checkpoint, a
+    # bit flip injected into the state three steps later forces a rollback —
+    # recovery must detect the corruption (CRC mismatch), fall back to the
+    # previous intact checkpoint, and land bit-identical to the fault-free
+    # schedule (survey §8.2: fail-slow/SDC defenses must not change
+    # convergence)
+    import tempfile
+    from repro.checkpoint import store as ckpt_store
+    from repro.core import ParallelPlan as _PP
+    from repro.ft import RecoveryPolicy, run_with_recovery
+    from repro.ft.inject import FaultSpec, armed, make_injector
+
+    cfg = _tiny_cfg(n_layers=2, d_model=32, d_ff=64, vocab=64)
+    plan = _PP(remat="none", compute_dtype="float32")
+    model = build_model(cfg, plan)
+    ds = SyntheticDataset(cfg, InputShape("t", 16, 4, "train"))
+    get_batch = lambda s: {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+    step = jax.jit(make_train_step(model, plan, Hyper(total_steps=30)))
+    state0 = init_train_state(model, jax.random.PRNGKey(0))
+    ckpt = ckpt_store.CheckpointManager(
+        tempfile.mkdtemp(), keep=3, async_persist=False)
+    injector = make_injector(
+        [FaultSpec("train.step", "bitflip", step=13)])
+
+    def chaos_run():
+        with armed([FaultSpec("ckpt.shard_write", "drop_write", step=10)]):
+            final, report = run_with_recovery(
+                state0, step, get_batch, 15, ckpt,
+                Monitor(min_history=4, hang_min_seconds=30.0),
+                ckpt_every=5, plan=plan, fault_injector=injector,
+                policy=RecoveryPolicy())
+        assert report.ckpt_fallbacks == 1, report
+        # a high-exponent bit flip lands as a spike or an inf/nan loss
+        # depending on where it hits — either way the policy rolls back
+        assert any(s == 13 and k in ("nan", "spike") and a == "rollback"
+                   for s, k, a in report.actions), report.actions
+        ref = init_train_state(model, jax.random.PRNGKey(0))
+        for s in range(15):
+            ref, _ = step(ref, get_batch(s))
+        for a, b in zip(jax.tree.leaves(final.params),
+                        jax.tree.leaves(ref.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    us = timeit(chaos_run, warmup=0, iters=1)
+    emit("quick.ft.chaos", us,
+         "faults=drop_write+bitflip;fallback=1;params_bitmatch_reference=True")
 
 
 def main() -> None:

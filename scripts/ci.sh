@@ -5,17 +5,21 @@
 # mode, one shape per op), the overlap-TP ring path vs gspmd on a 2-way model
 # mesh (quick.tp.overlap), the zigzag ring context-parallel path vs the
 # single-device oracle on a 2-way cp mesh (quick.cp.ring), and a
-# selective-remat train step, and the elastic recovery path — hang on a 2x2
+# selective-remat train step, the elastic recovery path — hang on a 2x2
 # ZeRO-1 run, remesh to 1x2, reshard-restore, bit-matching losses
-# (quick.ft.elastic); records the remat-policy peak-memory/step-time
-# trade-off to BENCH_trainstep.json, the gspmd-vs-overlap tokens/sec +
-# bytes-transferred sweep to BENCH_tp.json, the gather-vs-ring
-# context-parallel sweep (incl. the S=16k attention-block peak-memory
-# assertion) to BENCH_cp.json, and the checkpoint sweep — blocking vs
+# (quick.ft.elastic) — and the chaos recovery path — a dropped shard write
+# silently corrupting the newest checkpoint plus an injected NaN payload,
+# recovered via CRC-verified fallback to the previous intact checkpoint with
+# bit-matching params (quick.ft.chaos); records the remat-policy
+# peak-memory/step-time trade-off to BENCH_trainstep.json, the
+# gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json, the
+# gather-vs-ring context-parallel sweep (incl. the S=16k attention-block
+# peak-memory assertion) to BENCH_cp.json, the checkpoint sweep — blocking vs
 # double-buffered snapshot stall plus cross-mesh reshard-restore latency —
-# to BENCH_ckpt.json (run.py prints a one-line delta vs the previous
-# JSON so the perf trajectory is visible in CI logs; a missing previous JSON
-# is reported as a first run, not an error).
+# to BENCH_ckpt.json, and the SDC integrity-audit overhead sweep (audit-vs-off
+# step time per family, asserted < 2x) to BENCH_integrity.json (run.py prints
+# a one-line delta vs the previous JSON so the perf trajectory is visible in
+# CI logs; a missing previous JSON is reported as a first run, not an error).
 #
 # `-o pipefail` matters: the benchmark steps are tee'd into logs, and without
 # it a crashing benchmark smoke would exit 0 through the pipe and pass
@@ -29,3 +33,4 @@ python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee benc
 python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log
 python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log
 python -m benchmarks.run --only ckpt --json BENCH_ckpt.json | tee bench_ckpt.log
+python -m benchmarks.run --only integrity --json BENCH_integrity.json | tee bench_integrity.log

@@ -55,14 +55,40 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import threading
 import time
+import zipfile
+import zlib
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CorruptCheckpointError(IOError):
+    """A checkpoint on disk failed integrity verification (checksum/CRC32
+    mismatch, unreadable manifest, missing or truncated shard file).
+
+    Subclasses ``IOError`` so callers matching the historical checksum
+    failure keep working; ``ft/recovery`` catches it specifically to fall
+    back to the newest *intact* checkpoint instead of crashing.
+    """
+
+
+def _inject():
+    """The fault-injection module, or None before repro.ft is importable.
+
+    Lazy by necessity: ``repro.ft.__init__`` imports ``ft.recovery`` which
+    imports this module — a top-level import here would cycle.
+    """
+    try:
+        from repro.ft import inject  # noqa: PLC0415
+        return inject
+    except ImportError:              # pragma: no cover - partial installs
+        return None
 
 # the ParallelPlan fields recorded in the manifest (impl/schedule knobs ride
 # along for forensics) ...
@@ -140,6 +166,10 @@ def _checksum(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def _clone_shardings(leaves: List[Any]):
     """Per-leaf out_shardings for the snapshot clone.
 
@@ -165,12 +195,22 @@ def _clone_shardings(leaves: List[Any]):
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
-                 async_persist: bool = True, async_snapshot: bool = False):
+                 async_persist: bool = True, async_snapshot: bool = False,
+                 io_retries: int = 3, io_backoff: float = 0.05,
+                 io_timeout: float = 30.0):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_persist = async_persist
         self.async_snapshot = async_snapshot
+        # persist-I/O robustness: ``io_retries`` attempts with exponential
+        # backoff starting at ``io_backoff`` seconds, abandoned once the
+        # cumulative wait would pass ``io_timeout`` (a wedged filesystem must
+        # not hold the fence forever). Exhausted retries surface through
+        # save()/wait() — ft/recovery records them as a "ckpt_io" anomaly.
+        self.io_retries = max(1, int(io_retries))
+        self.io_backoff = io_backoff
+        self.io_timeout = io_timeout
         self._pending: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._snapshot_ref: Any = None        # device clone kept alive
@@ -261,10 +301,16 @@ class CheckpointManager:
                     # single-shard leaves keep the legacy "a{i}" key
                     key = f"a{i}" if len(shards) == 1 else f"a{i}_s{j}"
                     arrays[key] = a
+                    # sha256 prefix (legacy) + CRC32 + dtype/shape digests:
+                    # restore verifies all of them, so a flipped bit, a
+                    # truncated member, or a silently retyped array all
+                    # surface as CorruptCheckpointError
                     keys.append({"key": key, "index": idx,
-                                 "checksum": _checksum(a)})
+                                 "checksum": _checksum(a),
+                                 "crc32": _crc32(a),
+                                 "dtype": str(a.dtype),
+                                 "shape": [int(d) for d in a.shape]})
                 shard_meta.append(keys)
-            np.savez(str(path) + ".npz", **arrays)
             manifest = {
                 "step": step,
                 "names": names,
@@ -276,7 +322,7 @@ class CheckpointManager:
                 "mesh_axes": mesh_axes,
                 "time": time.time(),
             }
-            (path.with_suffix(".json")).write_text(json.dumps(manifest))
+            self._persist_with_retry(step, path, arrays, manifest)
             self.persist_seconds = time.time() - t1
             self._gc()
 
@@ -298,6 +344,52 @@ class CheckpointManager:
                 self._snapshot_ref = None
         return path
 
+    def _persist_once(self, step: int, path: Path, arrays, manifest) -> None:
+        """One atomic persist attempt: npz then manifest, each written to a
+        temp path and ``os.replace``d into place. The npz lands first — a
+        crash between the two leaves no manifest, so the half-written
+        checkpoint is never listed, let alone picked as latest. The
+        ``ckpt.persist`` fault point fires per attempt (hang /
+        persist_exc); ``ckpt.shard_write`` fires *after* a
+        successful-looking write (silent corruption: the shard file is
+        dropped or truncated but the writer saw no error)."""
+        inj = _inject()
+        if inj is not None:
+            inj.io_fault("ckpt.persist", step)
+        tmp_npz = str(path) + ".tmp.npz"          # savez appends .npz itself
+        np.savez(tmp_npz[:-4], **arrays)
+        os.replace(tmp_npz, str(path) + ".npz")
+        tmp_json = Path(str(path) + ".json.tmp")
+        tmp_json.write_text(json.dumps(manifest))
+        os.replace(tmp_json, path.with_suffix(".json"))
+        if inj is not None:
+            sp = inj.io_spec_for("ckpt.shard_write", step,
+                                 ("drop_write", "truncate_write"))
+            if sp is not None:
+                npz = Path(str(path) + ".npz")
+                if sp.kind == "drop_write":
+                    npz.unlink(missing_ok=True)
+                else:
+                    data = npz.read_bytes()
+                    npz.write_bytes(data[:max(len(data) // 2, 1)])
+
+    def _persist_with_retry(self, step: int, path: Path, arrays,
+                            manifest) -> None:
+        """Exponential-backoff retry around the persist write: transient I/O
+        errors (NFS blips, injected persist_exc) are retried up to
+        ``io_retries`` times with delays ``io_backoff * 2^k``, bounded by the
+        cumulative ``io_timeout`` deadline; the final failure propagates."""
+        deadline = time.time() + self.io_timeout
+        delay = self.io_backoff
+        for attempt in range(1, self.io_retries + 1):
+            try:
+                return self._persist_once(step, path, arrays, manifest)
+            except Exception:
+                if attempt >= self.io_retries or time.time() + delay > deadline:
+                    raise
+                time.sleep(delay)
+                delay *= 2
+
     def wait(self):
         """Completion fence: join in-flight snapshot/persist work and raise
         any failure it hit (a persist that dies with its daemon thread would
@@ -318,12 +410,23 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------------
 
-    def latest_step(self) -> Optional[int]:
+    def steps(self, newest_first: bool = False) -> List[int]:
+        """Steps of every checkpoint on disk, parsed from the *filenames*
+        (never the manifest contents, so a corrupted JSON still lists and
+        can be skipped by a fallback restore)."""
         self.wait()
-        ckpts = sorted(self.dir.glob("ckpt_*.json"))
-        if not ckpts:
-            return None
-        return json.loads(ckpts[-1].read_text())["step"]
+        out = []
+        for p in self.dir.glob("ckpt_*.json"):
+            try:
+                out.append(int(p.stem.split("_", 1)[1]))
+            except (IndexError, ValueError):
+                continue
+        out.sort(reverse=newest_first)
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
 
     def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
         """The JSON manifest of a checkpoint (layout metadata included)."""
@@ -333,7 +436,14 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = self.dir / f"ckpt_{step:08d}"
-        return json.loads(path.with_suffix(".json").read_text())
+        try:
+            return json.loads(path.with_suffix(".json").read_text())
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            # json.JSONDecodeError subclasses ValueError — without this wrap
+            # it would be mistaken for check_plan's layout-mismatch error
+            raise CorruptCheckpointError(
+                f"unreadable manifest for step {step} in {self.dir}: "
+                f"{e!r}") from e
 
     def check_plan(self, plan, step: Optional[int] = None, *,
                    mesh=None, elastic: bool = False) -> str:
@@ -377,8 +487,13 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = self.dir / f"ckpt_{step:08d}"
-        manifest = json.loads(path.with_suffix(".json").read_text())
-        data = np.load(str(path) + ".npz")
+        manifest = self.manifest(step)
+        try:
+            data = np.load(str(path) + ".npz")
+        except (OSError, ValueError, zipfile.BadZipFile) as e:
+            # missing / truncated / corrupted zip container
+            raise CorruptCheckpointError(
+                f"unreadable shard file {path}.npz: {e!r}") from e
         shard_meta = manifest.get("shards")
         if shard_meta is None:                # legacy single-array layout
             shard_meta = [[{"key": f"a{i}", "index": None, "checksum": c}]
@@ -387,10 +502,27 @@ class CheckpointManager:
         for metas, shape, dt, n in zip(
                 shard_meta, manifest["shapes"], manifest["dtypes"],
                 manifest["names"]):
-            if verify:
-                for m in metas:
-                    if _checksum(data[m["key"]]) != m["checksum"]:
-                        raise IOError(f"checksum mismatch for {n} in {path}")
+            for m in metas:
+                try:
+                    a = data[m["key"]]
+                except Exception as e:        # truncated/dropped zip member
+                    raise CorruptCheckpointError(
+                        f"unreadable shard {m['key']} for {n} in "
+                        f"{path}: {e!r}") from e
+                if not verify:
+                    continue
+                if _checksum(a) != m["checksum"] or \
+                        ("crc32" in m and _crc32(a) != m["crc32"]):
+                    raise CorruptCheckpointError(
+                        f"checksum mismatch for {n} in {path}")
+                if "dtype" in m and str(a.dtype) != m["dtype"]:
+                    raise CorruptCheckpointError(
+                        f"dtype digest mismatch for {n} in {path}: "
+                        f"{a.dtype} != {m['dtype']}")
+                if "shape" in m and list(a.shape) != list(m["shape"]):
+                    raise CorruptCheckpointError(
+                        f"shape digest mismatch for {n} in {path}: "
+                        f"{list(a.shape)} != {m['shape']}")
             if len(metas) == 1:
                 # one unique shard ⇒ it covers the whole array (a valid
                 # sharding's shards union to the full index space)

@@ -10,6 +10,26 @@ Two layers of configuration:
   sharding, pipeline stages, remat policy.
 
 Everything is a frozen dataclass so configs hash and can key jit caches.
+
+Robustness knobs (survey §8) at a glance:
+
+====================================  =======================================
+knob                                  meaning
+====================================  =======================================
+``ParallelPlan.integrity``            ``off`` | ``audit``: per-step uint32
+                                      param/grad checksum cross-checked
+                                      across replicas → ``sdc`` anomaly
+``RecoveryPolicy.sdc``                action on checksum divergence
+                                      (default ``rollback``)
+``RecoveryPolicy.ckpt_io``            action on exhausted persist retries
+                                      (default ``ignore``)
+``CheckpointManager(keep=K)``         keep-last-K GC; corrupt checkpoints are
+                                      skipped on restore, so K > 1 is the
+                                      fallback budget
+``CheckpointManager(io_retries=N,     persist-write retry loop: N attempts,
+  io_backoff=s, io_timeout=T)``       exponential backoff starting at ``s``
+                                      seconds, cumulative deadline ``T``
+====================================  =======================================
 """
 
 from __future__ import annotations
@@ -305,8 +325,26 @@ class ParallelPlan:
                                    # entering states for the backward).
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    integrity: str = "off"         # "off" | "audit": silent-data-corruption
+                                   # defense (survey §8.2). "audit" makes the
+                                   # train step emit an exact uint32 bitcast
+                                   # checksum of updated params + grads
+                                   # (ft/integrity.tree_checksum) and cross-
+                                   # check it across every mesh axis with a
+                                   # pmax/pmin pair — metrics gain
+                                   # "integrity_checksum" and
+                                   # "integrity_div" (0.0 = all replicas
+                                   # bit-identical); ft/recovery turns a
+                                   # nonzero divergence into an "sdc"
+                                   # anomaly (policy default: rollback).
+                                   # Cost is one elementwise pass + two
+                                   # scalar collectives, measured per family
+                                   # by BENCH_integrity.json.
 
     def validate(self, cfg: ModelConfig) -> None:
+        if self.integrity not in ("off", "audit"):
+            raise ValueError(
+                f"integrity must be off|audit, got {self.integrity!r}")
         for knob in ("attn_impl", "moe_gemm_impl", "ssm_impl"):
             if getattr(self, knob) not in ("auto", "xla", "pallas"):
                 raise ValueError(
@@ -399,6 +437,19 @@ class RecoveryPolicy:
                                      # mesh and reshard-restores (needs the
                                      # driver's remesh hook); default ignore
                                      # keeps the watchdog advisory-only
+    sdc: str = "rollback"            # cross-replica integrity-checksum
+                                     # divergence under plan.integrity=
+                                     # "audit": a device produced different
+                                     # bits — the state cannot be trusted,
+                                     # roll back to the last checkpoint
+    ckpt_io: str = "ignore"          # checkpoint persist failed after
+                                     # io_retries attempts (ft/inject's
+                                     # persist_exc, full disk, ...): the
+                                     # *run* is still healthy, so default
+                                     # ignore — the anomaly is recorded and
+                                     # training continues on the older
+                                     # checkpoint cadence; "rollback" forces
+                                     # an immediate restore instead
     max_restores: int = 3            # give up after this many restores
     rescue_lr_scale: float = 0.1     # LR multiplier while an lr_rescue step
                                      # replays the offending step
@@ -407,7 +458,8 @@ class RecoveryPolicy:
                                      # of refusing on a layout change)
 
     def validate(self) -> None:
-        for knob in ("nan", "spike", "repeated_spike", "hang"):
+        for knob in ("nan", "spike", "repeated_spike", "hang", "sdc",
+                     "ckpt_io"):
             if getattr(self, knob) not in RECOVERY_ACTIONS:
                 raise ValueError(
                     f"{knob} action must be one of {RECOVERY_ACTIONS}, "

@@ -1,6 +1,19 @@
+"""Fault tolerance (survey §8): detection, recovery, and chaos testing.
+
+- :mod:`repro.ft.anomaly` — statistical detectors (nan/inf, spike, hang)
+  plus externally-noted kinds (sdc, ckpt_io);
+- :mod:`repro.ft.recovery` — the policy-table recovery driver;
+- :mod:`repro.ft.inject` — deterministic seeded fault injection at named
+  fault points (the registry is ``inject.FAULT_POINTS``; see that module's
+  docstring for how to add a point);
+- :mod:`repro.ft.integrity` — device-side SDC checksums cross-checked
+  across replicas (``plan.integrity = "audit"``).
+"""
+
 from repro.core.config import RecoveryPolicy
 from .anomaly import Anomaly, Monitor
-from .recovery import RemeshSpec, RunReport, run_with_recovery
+from .recovery import (RecoveryExhausted, RemeshSpec, RunReport,
+                       run_with_recovery)
 
-__all__ = ["Anomaly", "Monitor", "RecoveryPolicy", "RemeshSpec",
-           "RunReport", "run_with_recovery"]
+__all__ = ["Anomaly", "Monitor", "RecoveryExhausted", "RecoveryPolicy",
+           "RemeshSpec", "RunReport", "run_with_recovery"]

@@ -23,7 +23,7 @@ from typing import Deque, List, Optional
 
 @dataclasses.dataclass
 class Anomaly:
-    kind: str          # "nan" | "spike" | "hang"
+    kind: str          # "nan" | "spike" | "hang" | "sdc" | "ckpt_io"
     step: int
     detail: str
 
@@ -85,6 +85,15 @@ class Monitor:
         if out:
             self.anomalies.append(out)
         return out
+
+    def note(self, kind: str, step: int, detail: str = "") -> Anomaly:
+        """Record an externally-detected anomaly (integrity-checksum
+        divergence -> "sdc", exhausted persist retries -> "ckpt_io"): the
+        statistical detectors above can't see these, but they belong in the
+        same audit trail and policy routing."""
+        a = Anomaly(kind, step, detail)
+        self.anomalies.append(a)
+        return a
 
     def reset_heartbeat(self, now: Optional[float] = None) -> None:
         """Restart the hang watchdog clock (call after a checkpoint restore —

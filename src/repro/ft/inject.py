@@ -1,0 +1,323 @@
+"""Deterministic fault injection (survey §8.1/§8.2) — the chaos half of the
+fault-tolerance stack.
+
+Every recovery path in ``ft/recovery`` is only as trustworthy as the faults
+it has been exercised against. This module provides *scheduled, seeded,
+replayable* faults at **named fault points** threaded through the real hot
+paths, so a failure observed once can be replayed bit-identically:
+
+===================  ========================================================
+fault point          where it fires
+===================  ========================================================
+``ckpt.persist``     :meth:`repro.checkpoint.store.CheckpointManager.save`'s
+                     persist write (host side, per attempt)
+``ckpt.shard_write`` the final shard file on disk (silent corruption: drop /
+                     truncate after a successful-looking write)
+``train.step``       the recovery driver's loop, via :func:`make_injector`
+                     (state-level corruption before the jitted step)
+``tp.ring.tick``     the overlap-TP collective matmuls' ppermute payloads
+                     (:mod:`repro.train.tensor_parallel`)
+``cp.ring.kv``       ring-attention KV chunks between cp ticks
+                     (:mod:`repro.train.executor`)
+``cp.ring.state``    the SSD entering-state chain messages (executor)
+``kernel.attention`` / ``kernel.expert_gemm`` / ``kernel.ssd``
+                     the per-op dispatcher outputs (:mod:`repro.kernels.dispatch`)
+``integrity.checksum``  the device-side integrity checksum input
+                     (:mod:`repro.ft.integrity`) — the SDC test bed
+===================  ========================================================
+
+**Adding a new fault point** is two lines: call :func:`register_fault_point`
+(name + one-line doc) at import time, then place either ``taint(name, x)``
+(device-side, trace-time) or ``io_fault(name, step=...)`` (host-side) at the
+seam. ``taint`` is identity unless a matching :class:`FaultSpec` is *armed*
+(:func:`armed` / :func:`trace_with_faults`), so the production path pays
+nothing — the corruption is baked into a *separate* traced function the test
+calls only at the scheduled step.
+
+Determinism: corruption indices/bits derive from ``zlib.crc32`` of
+``(point, step, seed)`` — never Python's salted ``hash()`` — so the same
+spec replays the same flipped bit on any host.
+
+Fault classes (``FaultSpec.kind``): ``bitflip`` (xor one high-exponent bit
+of one element), ``nan`` (poison one element), ``spike`` (scale the whole
+payload), ``hang`` (host sleep), ``drop_write`` (shard file vanishes),
+``truncate_write`` (shard file cut short), ``persist_exc`` (persist thread
+raises).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import zlib
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Tuple
+
+FAULT_KINDS = ("bitflip", "nan", "spike", "hang",
+               "drop_write", "truncate_write", "persist_exc")
+
+# name -> one-line doc. The registry is the contract between injection sites
+# and tests: taint()/io_fault() refuse unknown names, so a typo'd fault point
+# fails loudly instead of silently never firing.
+FAULT_POINTS: Dict[str, str] = {}
+
+
+def register_fault_point(name: str, doc: str) -> str:
+    FAULT_POINTS[name] = doc
+    return name
+
+
+for _n, _d in (
+    ("ckpt.persist", "checkpoint persist write, per attempt (host)"),
+    ("ckpt.shard_write", "final shard file on disk (drop/truncate)"),
+    ("train.step", "recovery-driver loop, state-level (make_injector)"),
+    ("tp.ring.tick", "overlap-TP ring ppermute payload"),
+    ("cp.ring.kv", "ring-attention KV chunk between cp ticks"),
+    ("cp.ring.state", "SSD entering-state chain message"),
+    ("kernel.attention", "attention dispatcher output"),
+    ("kernel.expert_gemm", "expert-GEMM dispatcher output"),
+    ("kernel.ssd", "SSD-scan dispatcher output"),
+    ("integrity.checksum", "device-side integrity checksum input"),
+):
+    register_fault_point(_n, _d)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: (step, point, seed) -> a deterministic failure.
+
+    ``step`` schedules host-side (``io_fault``) and driver-level
+    (``make_injector``) faults; for trace-time ``taint`` points it seeds the
+    corruption (the *armed trace* decides when the faulty function runs).
+    ``tick`` picks which taint call site fires when a point traces more than
+    once (ring ticks / layers); ``tick=None`` fires on *every* trace
+    occurrence — the robust choice when jax may trace a seam more than once
+    (custom_vjp fwd, scanned layer bodies); ``times`` bounds host-side firings
+    (``persist_exc`` with ``times > io_retries`` exhausts the retry loop).
+    ``rank``/``axis`` restrict device-side corruption to one mesh rank —
+    the only way to create *replica-divergent* state (true SDC) under SPMD,
+    where an unmasked corruption computes identically on every replica.
+    """
+    point: str
+    kind: str
+    step: int = 0
+    seed: int = 0
+    scale: float = 1e4        # "spike" multiplier
+    sleep_s: float = 1.0      # "hang" duration
+    tick: Optional[int] = 0   # which trace occurrence fires (None = all)
+    times: int = 1            # host-side max firings
+    rank: Optional[int] = None
+    axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.point not in FAULT_POINTS:
+            raise ValueError(
+                f"unknown fault point {self.point!r}; registered: "
+                f"{sorted(FAULT_POINTS)}")
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+
+    def key(self) -> int:
+        """The deterministic corruption key (crc32, never salted hash())."""
+        return zlib.crc32(f"{self.point}:{self.step}:{self.seed}".encode())
+
+
+class FaultController:
+    """Process-wide armed-fault state (thread-safe: the checkpoint persist
+    thread consults it concurrently with the main loop)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._specs: List[FaultSpec] = []
+        self._trace_counts: Dict[str, int] = {}
+        self._io_counts: Dict[Tuple[str, str, int], int] = {}
+        self.fired: List[Tuple[str, str, int]] = []   # (point, kind, step)
+
+    def install(self, specs) -> None:
+        with self._lock:
+            self._specs = list(specs)
+            self._trace_counts = {}
+            self._io_counts = {}
+
+    def clear(self) -> None:
+        self.install(())
+
+    def trace_spec(self, point: str) -> Optional[FaultSpec]:
+        """The armed spec for a device-side point, honoring ``tick`` against
+        a per-point trace counter; marks it fired."""
+        with self._lock:
+            n = self._trace_counts.get(point, 0)
+            self._trace_counts[point] = n + 1
+            for sp in self._specs:
+                if sp.point == point and (sp.tick is None or sp.tick == n):
+                    self.fired.append((point, sp.kind, sp.step))
+                    return sp
+        return None
+
+    def io_spec(self, point: str, step: int) -> Optional[FaultSpec]:
+        """The armed spec for a host-side point at ``step`` (``times``-
+        bounded); marks it fired."""
+        with self._lock:
+            for sp in self._specs:
+                if sp.point != point or sp.step != step:
+                    continue
+                k = (point, sp.kind, sp.step)
+                if self._io_counts.get(k, 0) >= sp.times:
+                    continue
+                self._io_counts[k] = self._io_counts.get(k, 0) + 1
+                self.fired.append(k)
+                return sp
+        return None
+
+
+CONTROLLER = FaultController()
+
+
+@contextmanager
+def armed(specs):
+    """Arm ``specs`` for the duration of the block (and disarm after).
+
+    Device-side ``taint`` points only fire while the *trace* happens inside
+    an armed block — arm, trace the faulty twin of the step function, disarm;
+    the clean jitted step is untouched.
+    """
+    CONTROLLER.install(specs)
+    try:
+        yield CONTROLLER
+    finally:
+        CONTROLLER.clear()
+
+
+def corrupt_array(x, spec: FaultSpec):
+    """Deterministically corrupt one array per ``spec`` (pure jnp; traceable).
+
+    ``bitflip`` xors a high exponent bit of one element (crc32-chosen index)
+    — the classic SDC that turns a weight into a huge value; ``nan`` poisons
+    one element; ``spike`` scales the whole payload. With ``rank``/``axis``
+    set, only that mesh rank's shard is corrupted (requires tracing inside
+    shard_map over ``axis``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = spec.key()
+    size = 1
+    for d in x.shape:
+        size *= int(d)
+    idx = key % max(size, 1)
+    if spec.kind == "spike":
+        bad = x * jnp.asarray(spec.scale, x.dtype)
+    elif spec.kind == "nan":
+        bad = jnp.ravel(x).at[idx].set(jnp.asarray(float("nan"), x.dtype)
+                                       ).reshape(x.shape)
+    elif spec.kind == "bitflip":
+        uint = {2: jnp.uint16, 4: jnp.uint32}.get(jnp.dtype(x.dtype).itemsize)
+        if uint is None or not jnp.issubdtype(x.dtype, jnp.floating):
+            bad = x * jnp.asarray(spec.scale, x.dtype)   # non-float fallback
+        else:
+            nbits = 8 * jnp.dtype(x.dtype).itemsize
+            bit = nbits - 2          # highest exponent bit: a loud flip
+            bits = jax.lax.bitcast_convert_type(jnp.ravel(x), uint)
+            bits = bits.at[idx].set(bits[idx] ^ jnp.asarray(1 << bit, uint))
+            bad = jax.lax.bitcast_convert_type(bits, x.dtype).reshape(x.shape)
+    else:
+        raise ValueError(f"{spec.kind!r} is not a payload-corruption kind")
+    if spec.rank is not None and spec.axis is not None:
+        on_rank = jax.lax.axis_index(spec.axis) == spec.rank
+        bad = jnp.where(on_rank, bad, x)
+    return bad
+
+
+def taint(point: str, x):
+    """Device-side fault seam: identity unless ``point`` is armed at trace
+    time, in which case the corruption is baked into the traced function.
+    Place after the payload is produced (post-ppermute / dispatcher return).
+    """
+    if point not in FAULT_POINTS:
+        raise ValueError(f"unknown fault point {point!r}")
+    sp = CONTROLLER.trace_spec(point)
+    if sp is None:
+        return x
+    return corrupt_array(x, sp)
+
+
+def io_fault(point: str, step: int) -> None:
+    """Host-side fault seam: raise/sleep per the armed spec (``drop_write`` /
+    ``truncate_write`` are handled by the caller via :func:`io_spec_for` —
+    they mutate a file, not control flow)."""
+    sp = CONTROLLER.io_spec(point, step)
+    if sp is None:
+        return
+    if sp.kind == "hang":
+        time.sleep(sp.sleep_s)
+    elif sp.kind == "persist_exc":
+        raise InjectedFault(f"injected persist exception at step {step}")
+    else:
+        raise ValueError(
+            f"{sp.kind!r} must be applied by the caller (io_spec_for)")
+
+
+def io_spec_for(point: str, step: int, kinds) -> Optional[FaultSpec]:
+    """Caller-applied host faults (file drop/truncate): the armed spec for
+    ``point``/``step`` if its kind is in ``kinds``, else None."""
+    with CONTROLLER._lock:
+        for sp in CONTROLLER._specs:
+            if sp.point == point and sp.step == step and sp.kind in kinds:
+                k = (point, sp.kind, sp.step)
+                if CONTROLLER._io_counts.get(k, 0) >= sp.times:
+                    continue
+                CONTROLLER._io_counts[k] = CONTROLLER._io_counts.get(k, 0) + 1
+                CONTROLLER.fired.append(k)
+                return sp
+    return None
+
+
+class InjectedFault(RuntimeError):
+    """An exception raised by an armed ``persist_exc`` fault."""
+
+
+def trace_with_faults(fn, *args, specs):
+    """Jit-trace ``fn`` with ``specs`` armed and return the faulty compiled
+    twin. The arm window covers exactly one trace (the first call), so the
+    baked corruption is deterministic and the global controller is clean on
+    exit; the caller invokes the twin only at the scheduled step.
+
+    The trace runs through a fresh closure: jax's jit cache is keyed on the
+    function object, so jitting ``fn`` directly would silently reuse an
+    existing *clean* trace of the same function (and bake no corruption) —
+    or worse, leave a faulty executable in the cache for later clean users.
+    """
+    import jax
+    fjit = jax.jit(lambda *a: fn(*a))   # unique identity -> fresh trace
+    with armed(specs):
+        out = fjit(*args)
+    jax.block_until_ready(jax.tree.leaves(out))
+    return fjit
+
+
+def make_injector(specs):
+    """A ``run_with_recovery``-compatible ``fault_injector(step, state)`` for
+    ``train.step`` faults: state-level bitflip/nan/spike (applied to params)
+    and host hangs, scheduled by ``spec.step`` and bounded by ``spec.times``.
+    """
+    import jax
+    specs = [s for s in specs if s.point == "train.step"]
+    counts: Dict[int, int] = {}
+
+    def injector(step: int, state):
+        for i, sp in enumerate(specs):
+            if sp.step != step or counts.get(i, 0) >= sp.times:
+                continue
+            counts[i] = counts.get(i, 0) + 1
+            CONTROLLER.fired.append((sp.point, sp.kind, sp.step))
+            if sp.kind == "hang":
+                time.sleep(sp.sleep_s)
+            else:
+                params = jax.tree.map(lambda x: corrupt_array(x, sp),
+                                      state.params)
+                state = state._replace(params=params)
+        return state
+
+    return injector

@@ -4,9 +4,14 @@ detect -> policy -> recover state machine.
 Each anomaly kind from :class:`repro.ft.anomaly.Monitor` maps through a
 :class:`repro.core.RecoveryPolicy` table to an action:
 
-- **rollback** — restore the latest checkpoint and replay. The deterministic
-  data pipeline (batch = f(arch, step)) makes replay bit-faithful; the
-  property test asserts a recovered run matches an uninterrupted one.
+- **rollback** — restore the latest *intact* checkpoint and replay. The
+  deterministic data pipeline (batch = f(arch, step)) makes replay
+  bit-faithful; the property test asserts a recovered run matches an
+  uninterrupted one. A checkpoint that fails integrity verification
+  (:class:`repro.checkpoint.store.CorruptCheckpointError` — flipped bits,
+  dropped or truncated shard file, unreadable manifest) is *skipped* and the
+  restore falls back to the next-newest checkpoint instead of crashing,
+  which is what the keep-last-K GC budget exists for.
 - **lr_rescue** — a spike that *recurs at the same step* after a rollback
   means replay alone loops; roll back and damp the optimizer through the bad
   step instead (PaLM-style spike handling): the driver's ``rescue_step`` (a
@@ -23,6 +28,26 @@ Each anomaly kind from :class:`repro.ft.anomaly.Monitor` maps through a
 - **ignore** — log and continue (the hang watchdog's default, so slow-step
   jitter never rolls back a healthy run unless asked to).
 
+Two anomaly kinds originate outside the Monitor's statistical detectors
+(they enter via :meth:`Monitor.note`):
+
+- **sdc** — with ``plan.integrity = "audit"`` the train step emits
+  ``metrics["integrity_div"]``, the cross-replica spread of an exact
+  param/grad checksum (:mod:`repro.ft.integrity`); any nonzero value means a
+  device produced different bits and routes through ``policy.sdc``
+  (default rollback — the state cannot be trusted).
+- **ckpt_io** — a checkpoint persist that failed even after the store's
+  retry/backoff loop. The run itself is healthy, so ``policy.ckpt_io``
+  defaults to ignore (training continues on the older checkpoint cadence);
+  ``"rollback"`` forces an immediate restore instead.
+
+Fault injection for tests rides two hooks: ``fault_injector(step, state)``
+(state-level corruption, see :func:`repro.ft.inject.make_injector`) and
+``fault_step_fn(step)`` — returning a *faulty compiled twin* of the train
+step (built by :func:`repro.ft.inject.trace_with_faults`) to run at that
+step, which is how trace-time payload corruption (ring ticks, kernel
+outputs, checksum inputs) is scheduled without touching the clean step.
+
 After every restore the Monitor's heartbeat is reset: restore wall-time is
 not a step time and must not trip a false hang.
 """
@@ -32,9 +57,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.checkpoint.store import CheckpointManager
+from repro.checkpoint.store import CheckpointManager, CorruptCheckpointError
 from repro.core.config import RecoveryPolicy
 from .anomaly import Anomaly, Monitor
+
+
+class RecoveryExhausted(RuntimeError):
+    """max_restores spent without clearing the fault; carries the anomaly
+    that forced the final (refused) restore."""
+
+    def __init__(self, restores: int, anomaly: Optional[Anomaly]):
+        super().__init__(f"giving up after {restores} restores: {anomaly}")
+        self.restores = restores
+        self.anomaly = anomaly
 
 
 @dataclasses.dataclass
@@ -64,6 +99,8 @@ class RunReport:
     remeshes: int = 0
     # (step, anomaly kind, action taken) — the policy audit trail
     actions: List[Tuple[int, str, str]] = dataclasses.field(default_factory=list)
+    # corrupt checkpoints skipped by fallback restores
+    ckpt_fallbacks: int = 0
 
 
 def run_with_recovery(
@@ -82,15 +119,19 @@ def run_with_recovery(
     rescue_step: Optional[Callable[[Any, Dict], Tuple[Any, Dict]]] = None,
     remesh: Optional[Callable[[], RemeshSpec]] = None,
     resume: bool = False,
+    fault_step_fn: Optional[Callable[[int], Optional[Callable]]] = None,
 ) -> Tuple[Any, RunReport]:
     """Run ``n_steps`` with periodic checkpointing and anomaly-driven recovery.
 
-    ``fault_injector(step, state) -> state`` lets tests corrupt the run.
+    ``fault_injector(step, state) -> state`` lets tests corrupt the run;
+    ``fault_step_fn(step) -> step_fn | None`` swaps in a faulty traced twin
+    of the train step for that step (trace-time payload corruption).
     ``plan``/``mesh`` stamp the layout axes into every checkpoint manifest;
     each restore routes through :meth:`CheckpointManager.check_plan` —
     same-layout checkpoints replay shard-to-shard, and with
     ``policy.elastic`` a layout change takes the reshard path instead of
-    refusing. ``remesh()`` is the elastic hook: called on a hang when
+    refusing. Restores skip corrupt checkpoints (newest-intact fallback).
+    ``remesh()`` is the elastic hook: called on a hang when
     ``policy.hang == "remesh"``, it returns the shrunken-cluster
     :class:`RemeshSpec` the run continues under. ``resume=True`` picks up
     from the latest checkpoint already in ``ckpt`` (resharding onto
@@ -104,27 +145,57 @@ def run_with_recovery(
     actions: List[Tuple[int, str, str]] = []
     restores = 0
     remeshes = 0
+    fallbacks = 0
     spike_counts: Dict[int, int] = {}
     rescue_mode: Dict[int, str] = {}   # step -> "rescue" | "skip", sticky
     step = 0
 
     def _restore(template, shardings=None, the_plan=None, the_mesh=None):
-        route = "replay"
-        if the_plan is not None or the_mesh is not None:
-            route = ckpt.check_plan(the_plan, mesh=the_mesh,
-                                    elastic=policy.elastic)
-        if route == "reshard":
-            s, tree = ckpt.restore_resharded(template, shardings=shardings)
-        else:
-            s, tree = ckpt.restore(template)
-        monitor.reset_heartbeat()      # restore wall-time is not a step time
-        return s, tree
+        """Newest-intact restore: walk checkpoints newest-first, skipping any
+        that fail integrity verification (the keep-last-K fallback)."""
+        nonlocal fallbacks
+        candidates = ckpt.steps(newest_first=True)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {ckpt.dir}")
+        last_err: Optional[Exception] = None
+        for s in candidates:
+            try:
+                route = "replay"
+                if the_plan is not None or the_mesh is not None:
+                    route = ckpt.check_plan(the_plan, step=s, mesh=the_mesh,
+                                            elastic=policy.elastic)
+                if route == "reshard":
+                    got, tree = ckpt.restore_resharded(
+                        template, shardings=shardings, step=s)
+                else:
+                    got, tree = ckpt.restore(template, step=s)
+            except CorruptCheckpointError as e:
+                fallbacks += 1
+                monitor.note("ckpt_corrupt", s, repr(e))
+                last_err = e
+                continue
+            monitor.reset_heartbeat()  # restore wall-time is not a step time
+            return got, tree
+        raise last_err                 # every checkpoint on disk is corrupt
+
+    def _try_save(s, st, blocking=False) -> Optional[Anomaly]:
+        """Save, converting an (already retried) persist failure into a
+        ``ckpt_io`` anomaly routed through ``policy.ckpt_io``. With async
+        persist the failure of save N surfaces at save N+1's fence — the
+        anomaly is stamped with the step the failure *surfaced* at."""
+        try:
+            ckpt.save(s, st, blocking=blocking, plan=plan, mesh=mesh)
+            return None
+        except (OSError, RuntimeError) as e:
+            a = monitor.note("ckpt_io", s, repr(e))
+            actions.append((s, "ckpt_io", policy.ckpt_io))
+            return a
 
     if resume and ckpt.latest_step() is not None:
         step, state = _restore(state, the_plan=plan, the_mesh=mesh)
         losses = [float("nan")] * step     # pre-resume slots are unknown
     else:
-        ckpt.save(step, state, blocking=True, plan=plan, mesh=mesh)
+        _try_save(step, state, blocking=True)
 
     while step < n_steps:
         mode = rescue_mode.get(step)
@@ -132,17 +203,26 @@ def run_with_recovery(
             losses.append(float("nan"))    # batch dropped by lr_rescue policy
             step += 1
             if step % ckpt_every == 0:
-                ckpt.save(step, state, plan=plan, mesh=mesh)
+                _try_save(step, state)
             continue
 
         cur = state
         if fault_injector is not None:
             cur = fault_injector(step, cur)
         fn = rescue_step if (mode == "rescue" and rescue_step) else train_step
+        if fault_step_fn is not None:
+            faulty = fault_step_fn(step)
+            if faulty is not None:
+                fn = faulty
         new_state, metrics = fn(cur, get_batch(step))
         loss = float(metrics["loss"])
         gnorm = float(metrics.get("grad_norm", 0.0))
+        div = float(metrics.get("integrity_div", 0.0))
         anomaly = monitor.record(step, loss, gnorm)
+        if div != 0.0:
+            # replica checksum divergence outranks the statistical detectors:
+            # the step's own outputs cannot be trusted, whatever they look like
+            anomaly = monitor.note("sdc", step, f"integrity_div={div}")
         if anomaly is not None and mode == "rescue" and anomaly.kind == "spike":
             anomaly = None                 # the rescue step owns this spike
 
@@ -159,8 +239,7 @@ def run_with_recovery(
 
             if action in ("rollback", "lr_rescue"):
                 if restores >= policy.max_restores:
-                    raise RuntimeError(
-                        f"giving up after {restores} restores: {anomaly}")
+                    raise RecoveryExhausted(restores, anomaly)
                 if action == "lr_rescue":
                     rescue_mode[step] = "rescue" if rescue_step else "skip"
                 step, state = _restore(state, the_plan=plan, the_mesh=mesh)
@@ -169,8 +248,7 @@ def run_with_recovery(
                 continue
             if action == "remesh":
                 if restores >= policy.max_restores:
-                    raise RuntimeError(
-                        f"giving up after {restores} restores: {anomaly}")
+                    raise RecoveryExhausted(restores, anomaly)
                 spec = remesh()
                 step, state = _restore(spec.state_template, spec.shardings,
                                        spec.plan, spec.mesh)
@@ -188,8 +266,18 @@ def run_with_recovery(
         losses.append(loss)
         step += 1
         if step % ckpt_every == 0:
-            ckpt.save(step, state, plan=plan, mesh=mesh)
+            a = _try_save(step, state)
+            if a is not None and policy.ckpt_io == "rollback":
+                if restores >= policy.max_restores:
+                    raise RecoveryExhausted(restores, a)
+                step, state = _restore(state, the_plan=plan, the_mesh=mesh)
+                restores += 1
+                del losses[step:]
 
-    ckpt.wait()
+    try:
+        ckpt.wait()
+    except (OSError, RuntimeError) as e:
+        monitor.note("ckpt_io", step, repr(e))
+        actions.append((step, "ckpt_io", policy.ckpt_io))
     return state, RunReport(step, monitor.anomalies, restores, losses,
-                            remeshes, actions)
+                            remeshes, actions, fallbacks)

@@ -34,12 +34,14 @@ merged (lse, Δ)); :func:`select_cp_impl` resolves ``ParallelPlan.cp_impl``.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.inject import taint
 from repro.models import layers as _layers
 from .flash_attention import (_pad_seq, flash_attention, flash_attention_bwd,
                               flash_attention_lse, resolve_interpret)
@@ -47,6 +49,22 @@ from .grouped_gemm import expert_gemm
 from .ssd_scan import ssd_chunk_scan
 
 IMPLS = ("auto", "xla", "pallas")
+
+
+def _tainted(point: str):
+    """Route a dispatcher's primary output through a named fault point
+    (ft/inject): identity unless a FaultSpec is armed at trace time, so the
+    production path is untouched while chaos tests can corrupt any fused-op
+    output (tuple returns taint their first element)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            out = fn(*args, **kwargs)
+            if isinstance(out, tuple):
+                return (taint(point, out[0]),) + out[1:]
+            return taint(point, out)
+        return wrapper
+    return deco
 
 
 def _is_static(x) -> bool:
@@ -248,6 +266,7 @@ def select_ssd_impl(impl: str, *, has_initial_state: bool = False) -> str:
 # attention
 
 
+@_tainted("kernel.attention")
 def dispatch_attention(q, k, v, *, impl: str = "auto", causal: bool = True,
                        window=0, softcap: float = 0.0, q_offset=0,
                        block_size: int = 1024,
@@ -288,6 +307,7 @@ def dispatch_attention(q, k, v, *, impl: str = "auto", causal: bool = True,
 # MoE expert GEMM
 
 
+@_tainted("kernel.expert_gemm")
 def dispatch_expert_gemm(x, w, group_sizes=None, *, impl: str = "auto",
                          block_c: int = 128, block_f: int = 128,
                          block_d: int = 256,
@@ -310,6 +330,7 @@ def dispatch_expert_gemm(x, w, group_sizes=None, *, impl: str = "auto",
 # Mamba2 SSD chunk scan
 
 
+@_tainted("kernel.ssd")
 def dispatch_ssd_scan(x, dt, A, B, C, *, chunk: int, impl: str = "auto",
                       initial_state=None,
                       interpret: Optional[bool] = None):

@@ -81,12 +81,21 @@ def main() -> None:
     ap.add_argument("--simulate-hang-at", type=int, default=-1,
                     help="fault injection for demos/tests: sleep 2s before "
                          "this step so the hang watchdog fires (-1 = off)")
+    ap.add_argument("--integrity", default="off", choices=["off", "audit"],
+                    help="silent-data-corruption audit (survey §8.2): 'audit' "
+                         "adds an exact param/grad checksum to every step, "
+                         "cross-checked across replicas; any divergence "
+                         "raises an 'sdc' anomaly routed through --on-sdc")
+    ap.add_argument("--on-sdc", default="rollback", choices=RECOVERY_ACTIONS,
+                    help="recovery action when the integrity audit detects "
+                         "replica checksum divergence")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, "train_4k", smoke=args.smoke)
     plan = ParallelPlan(remat=args.remat, microbatches=args.microbatches,
                         compute_dtype="float32" if args.smoke else "bfloat16",
-                        ep=cfg.family == Family.MOE)
+                        ep=cfg.family == Family.MOE,
+                        integrity=args.integrity)
     shape = InputShape("cli", args.seq, args.batch, "train")
 
     n_dev = len(jax.devices())
@@ -110,7 +119,7 @@ def main() -> None:
     policy = RecoveryPolicy(
         nan=args.on_nan, spike=args.on_spike,
         repeated_spike=args.on_repeated_spike, hang=args.on_hang,
-        max_restores=args.max_restores,
+        sdc=args.on_sdc, max_restores=args.max_restores,
         rescue_lr_scale=args.rescue_lr_scale)
     rescue_fn = None
     if "lr_rescue" in (policy.spike, policy.repeated_spike,

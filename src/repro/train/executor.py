@@ -69,6 +69,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import sharding as shardlib
 from repro.core.compat import shard_map
 from repro.core.config import Family, ModelConfig, ParallelPlan
+from repro.ft.inject import taint
 from repro.kernels.dispatch import (dispatch_attention,
                                     dispatch_attention_chunk_bwd,
                                     dispatch_attention_lse, dispatch_ssd_scan,
@@ -340,7 +341,10 @@ def _ring_attn_fwd_impl(rp: RingAttnParams, q, k, v):
                     v_cur[:, ki * lc:(ki + 1) * lc], q_ids[qi] - k_ids[ki])
                 o[qi], lse[qi] = _merge_lse(o[qi], lse[qi], o_c, lse_c)
         if step < cp - 1:
-            k_cur = jax.lax.ppermute(k_cur, rp.ctx.axis, rp.ctx.perm_fwd)
+            # fault seam: the visiting KV pair as it lands from the ring
+            # hop — a corrupted link payload lands here (ft/inject)
+            k_cur = taint("cp.ring.kv", jax.lax.ppermute(
+                k_cur, rp.ctx.axis, rp.ctx.perm_fwd))
             v_cur = jax.lax.ppermute(v_cur, rp.ctx.axis, rp.ctx.perm_fwd)
     out = jnp.concatenate(o, axis=1).astype(q.dtype)
     return out, jnp.concatenate(lse, axis=1)
@@ -452,7 +456,9 @@ def cp_chain_state(ctx: ParallelContext, state, decay):
     e = jnp.zeros_like(state)
     for k in range(1, cp):
         msg = state + decay[..., None, None] * e
-        recv = jax.lax.ppermute(msg, ctx.cp.axis, ctx.cp.perm_fwd)
+        # fault seam: the chain message as it lands on the next rank
+        recv = taint("cp.ring.state", jax.lax.ppermute(
+            msg, ctx.cp.axis, ctx.cp.perm_fwd))
         e = jnp.where(idx == k, recv, e)
     return e
 

@@ -181,6 +181,16 @@ def make_train_step(model: Model, plan: ParallelPlan,
             "lr": lr,
             "moe_aux": aux["moe_aux"],
         }
+        if plan.integrity == "audit":
+            # SDC audit (survey §8.2): exact bitwise checksum of the updated
+            # params + this step's grads, cross-checked across replicas.
+            # Any nonzero divergence means some device computed different
+            # bits — the recovery driver routes it through policy.sdc.
+            from repro.ft.integrity import replica_divergence  # noqa: PLC0415
+            cs, div = replica_divergence(
+                {"params": new_params, "grads": grads}, mesh=mesh)
+            metrics["integrity_checksum"] = cs
+            metrics["integrity_div"] = div
         return TrainState(new_params, new_opt), metrics
 
     return train_step

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core.config import Family, ModelConfig, ParallelPlan
+from repro.ft.inject import taint
 from repro.kernels.dispatch import dispatch_tp_matmul
 from repro.train.loss import cross_entropy_vp
 
@@ -124,7 +125,10 @@ def _ag_matmul_impl(ctx: RingCtx, x, ws):
                 outs[i], part, start, axis=1)
         xg = jax.lax.dynamic_update_slice_in_dim(xg, cur, start, axis=1)
         if k < t - 1:
-            cur = jax.lax.ppermute(cur, ctx.axis, ctx.perm_fwd)
+            # fault seam: the ring payload as it lands from the ppermute —
+            # where a link-level bit flip would corrupt it (ft/inject)
+            cur = taint("tp.ring.tick", jax.lax.ppermute(
+                cur, ctx.axis, ctx.perm_fwd))
     return tuple(outs), xg
 
 
