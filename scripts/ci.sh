@@ -10,13 +10,19 @@
 # (quick.ft.elastic) — and the chaos recovery path — a dropped shard write
 # silently corrupting the newest checkpoint plus an injected NaN payload,
 # recovered via CRC-verified fallback to the previous intact checkpoint with
-# bit-matching params (quick.ft.chaos); records the remat-policy
+# bit-matching params (quick.ft.chaos) — and the preemption path — a
+# SIGTERM-style notice mid-run answered with a just-in-time snapshot, a
+# PREEMPTED marker, and a bit-identical resume (quick.ft.preempt); records
+# the remat-policy
 # peak-memory/step-time trade-off to BENCH_trainstep.json, the
 # gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json, the
 # gather-vs-ring context-parallel sweep (incl. the S=16k attention-block
 # peak-memory assertion) to BENCH_cp.json, the checkpoint sweep — blocking vs
 # double-buffered snapshot stall plus cross-mesh reshard-restore latency —
-# to BENCH_ckpt.json, and the SDC integrity-audit overhead sweep (audit-vs-off
+# to BENCH_ckpt.json, the fast-recovery sweep — RAM-tier restore asserted
+# >= 10x faster than the verified disk restore, peer rebuild after a lost
+# host-group bit-matching disk, just-in-time snapshot vs grace — to
+# BENCH_recover.json, and the SDC integrity-audit overhead sweep (audit-vs-off
 # step time per family, asserted < 2x) to BENCH_integrity.json (run.py prints
 # a one-line delta vs the previous JSON so the perf trajectory is visible in
 # CI logs; a missing previous JSON is reported as a first run, not an error).
@@ -33,4 +39,5 @@ python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee benc
 python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log
 python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log
 python -m benchmarks.run --only ckpt --json BENCH_ckpt.json | tee bench_ckpt.log
+python -m benchmarks.run --only recover --json BENCH_recover.json | tee bench_recover.log
 python -m benchmarks.run --only integrity --json BENCH_integrity.json | tee bench_integrity.log

@@ -1,3 +1,5 @@
-from .store import CheckpointManager
+from .memory import MemoryCheckpointTier
+from .store import CheckpointManager, CorruptCheckpointError
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CorruptCheckpointError",
+           "MemoryCheckpointTier"]

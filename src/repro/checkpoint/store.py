@@ -108,6 +108,29 @@ def _plan_meta(plan) -> Optional[Dict[str, Any]]:
     return {k: d[k] for k in PLAN_AXES if k in d}
 
 
+def layout_diffs(manifest: Dict[str, Any], plan, mesh=None
+                 ) -> Dict[str, Tuple[Any, Any]]:
+    """Layout-axis differences between a manifest and a requested plan/mesh.
+
+    Empty dict ⇒ shard-to-shard replay is safe. Shared by
+    :meth:`CheckpointManager.check_plan` (disk tier) and
+    :class:`repro.checkpoint.memory.MemoryCheckpointTier` (hot tier), so
+    both tiers route replay/reshard/refuse with identical rules.
+    """
+    recorded = manifest.get("plan")
+    diffs: Dict[str, Tuple[Any, Any]] = {}
+    if recorded is not None and plan is not None:
+        want = _plan_meta(plan)
+        diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
+                 if k in recorded and k in want and recorded[k] != want[k]}
+    rec_mesh = manifest.get("mesh_axes")
+    if mesh is not None and rec_mesh is not None:
+        want_mesh = {k: int(v) for k, v in dict(mesh.shape).items()}
+        if {k: int(v) for k, v in rec_mesh.items()} != want_mesh:
+            diffs["mesh_axes"] = (rec_mesh, want_mesh)
+    return diffs
+
+
 def _index_json(index: Tuple[slice, ...], shape) -> List[List[int]]:
     """A shard's global-index slices as JSON: [[start, stop], ...]."""
     out = []
@@ -197,10 +220,14 @@ class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
                  async_persist: bool = True, async_snapshot: bool = False,
                  io_retries: int = 3, io_backoff: float = 0.05,
-                 io_timeout: float = 30.0):
+                 io_timeout: float = 30.0, flight=None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        # optional repro.ft.flight.FlightRecorder — persist/GC events land in
+        # the crash black box (deque appends are thread-safe, so logging from
+        # the persist thread is fine)
+        self.flight = flight
         self.async_persist = async_persist
         self.async_snapshot = async_snapshot
         # persist-I/O robustness: ``io_retries`` attempts with exponential
@@ -324,6 +351,9 @@ class CheckpointManager:
             }
             self._persist_with_retry(step, path, arrays, manifest)
             self.persist_seconds = time.time() - t1
+            if self.flight is not None:
+                self.flight.record("ckpt.persist", step, tier="disk",
+                                   seconds=self.persist_seconds)
             self._gc()
 
         def _bg():
@@ -384,8 +414,11 @@ class CheckpointManager:
         for attempt in range(1, self.io_retries + 1):
             try:
                 return self._persist_once(step, path, arrays, manifest)
-            except Exception:
+            except Exception as e:
                 if attempt >= self.io_retries or time.time() + delay > deadline:
+                    if self.flight is not None:
+                        self.flight.record("ckpt.persist_fail", step,
+                                           attempts=attempt, error=repr(e))
                     raise
                 time.sleep(delay)
                 delay *= 2
@@ -402,9 +435,67 @@ class CheckpointManager:
             raise RuntimeError(
                 f"background checkpoint persist failed: {err!r}") from err
 
+    def _is_intact(self, step: int) -> bool:
+        """Structural intactness: manifest parses, the npz zip container
+        opens, and every recorded shard member is present. Catches dropped
+        and truncated shard writes (a truncated zip loses its end-of-file
+        central directory) without re-reading shard bytes — cheap enough to
+        run per GC pass. Bit flips inside a member are left to the full
+        checksum verify at restore time. No fence: also called from the
+        persist thread by :meth:`_gc` (``wait()`` there would join the
+        thread into itself)."""
+        path = self.dir / f"ckpt_{step:08d}"
+        try:
+            man = self._read_manifest(step)
+            with zipfile.ZipFile(str(path) + ".npz") as zf:
+                members = set(zf.namelist())
+            shard_meta = man.get("shards")
+            if shard_meta is None:            # legacy single-array layout
+                shard_meta = [[{"key": f"a{i}"}]
+                              for i in range(len(man["checksums"]))]
+            for metas in shard_meta:
+                for m in metas:
+                    if m["key"] + ".npy" not in members:
+                        return False
+            return True
+        except (CorruptCheckpointError, OSError, zipfile.BadZipFile,
+                KeyError, ValueError):
+            return False
+
     def _gc(self):
-        ckpts = sorted(self.dir.glob("ckpt_*.json"))
-        for old in ckpts[:-self.keep]:
+        """Evict checkpoints beyond ``keep`` — verify-before-evict.
+
+        Age alone is not a safe eviction key: corrupt checkpoints (dropped /
+        truncated shard writes that looked successful) count toward ``keep``,
+        so a burst of bad persists used to GC every *restorable* checkpoint
+        while keeping only wreckage. Now, if none of the kept (newest
+        ``keep``) checkpoints is structurally intact, the newest intact
+        candidate among the evictees is spared — a keep-floor of one
+        restorable checkpoint whenever one exists. Runs on the persist
+        thread, so it must never call :meth:`wait`."""
+        steps = []
+        for p in self.dir.glob("ckpt_*.json"):
+            try:
+                steps.append(int(p.stem.split("_", 1)[1]))
+            except (IndexError, ValueError):
+                continue
+        steps.sort()
+        doomed = steps[:-self.keep] if self.keep > 0 else list(steps)
+        if not doomed:
+            return
+        spare = None
+        if not any(self._is_intact(s) for s in steps[len(doomed):]):
+            for s in reversed(doomed):
+                if self._is_intact(s):
+                    spare = s
+                    break
+        for s in doomed:
+            if s == spare:
+                if self.flight is not None:
+                    self.flight.record("ckpt.gc_spared", s,
+                                       reason="newest_intact_keep_floor")
+                continue
+            old = self.dir / f"ckpt_{s:08d}.json"
             old.unlink(missing_ok=True)
             old.with_suffix(".npz").unlink(missing_ok=True)
 
@@ -428,13 +519,9 @@ class CheckpointManager:
         steps = self.steps()
         return steps[-1] if steps else None
 
-    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
-        """The JSON manifest of a checkpoint (layout metadata included)."""
-        self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+    def _read_manifest(self, step: int) -> Dict[str, Any]:
+        """Manifest JSON for an explicit step — no completion fence, so it
+        is safe from the persist thread (:meth:`_is_intact`/:meth:`_gc`)."""
         path = self.dir / f"ckpt_{step:08d}"
         try:
             return json.loads(path.with_suffix(".json").read_text())
@@ -444,6 +531,15 @@ class CheckpointManager:
             raise CorruptCheckpointError(
                 f"unreadable manifest for step {step} in {self.dir}: "
                 f"{e!r}") from e
+
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The JSON manifest of a checkpoint (layout metadata included)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return self._read_manifest(step)
 
     def check_plan(self, plan, step: Optional[int] = None, *,
                    mesh=None, elastic: bool = False) -> str:
@@ -459,17 +555,7 @@ class CheckpointManager:
         non-elastic ft/recovery must refuse.
         """
         man = self.manifest(step)
-        recorded = man.get("plan")
-        diffs: Dict[str, Tuple[Any, Any]] = {}
-        if recorded is not None and plan is not None:
-            want = _plan_meta(plan)
-            diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
-                     if k in recorded and k in want and recorded[k] != want[k]}
-        rec_mesh = man.get("mesh_axes")
-        if mesh is not None and rec_mesh is not None:
-            want_mesh = {k: int(v) for k, v in dict(mesh.shape).items()}
-            if {k: int(v) for k, v in rec_mesh.items()} != want_mesh:
-                diffs["mesh_axes"] = (rec_mesh, want_mesh)
+        diffs = layout_diffs(man, plan, mesh)
         if not diffs:
             return "replay"
         if elastic:
@@ -486,8 +572,14 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return self._read_full(step, verify)
+
+    def _read_full(self, step: int, verify: bool
+                   ) -> Tuple[int, Dict[str, Any], List[np.ndarray]]:
+        """:meth:`_load_full` minus the fence and step resolution — usable
+        where ``wait()`` is illegal (persist thread) or already done."""
         path = self.dir / f"ckpt_{step:08d}"
-        manifest = self.manifest(step)
+        manifest = self._read_manifest(step)
         try:
             data = np.load(str(path) + ".npz")
         except (OSError, ValueError, zipfile.BadZipFile) as e:

@@ -29,6 +29,22 @@ knob                                  meaning
 ``CheckpointManager(io_retries=N,     persist-write retry loop: N attempts,
   io_backoff=s, io_timeout=T)``       exponential backoff starting at ``s``
                                       seconds, cumulative deadline ``T``
+``RecoveryPolicy.ckpt_memory_keep``   hot in-memory checkpoint tier: RAM ring
+                                      of the last K snapshots restored
+                                      *before* any disk walk (0 disables;
+                                      ``--ckpt-memory-keep``)
+``RecoveryPolicy.peer_redundancy``    mirror each host-group's RAM shards
+                                      onto its ring neighbor so one lost
+                                      group rebuilds from surviving peers
+                                      (``--no-peer-redundancy`` to disable)
+``RecoveryPolicy.preempt_grace``      seconds of grace after SIGTERM/SIGUSR1
+                                      for the just-in-time snapshot; tier
+                                      picked from measured persist time
+                                      (``--preempt-grace``)
+``RecoveryPolicy.flight_len``         crash flight recorder: ring capacity
+                                      of per-step events dumped to JSON on
+                                      preemption/crash/RecoveryExhausted
+                                      (``--flight-len``, ``--flight-path``)
 ====================================  =======================================
 """
 
@@ -456,6 +472,25 @@ class RecoveryPolicy:
     elastic: bool = True             # allow cross-layout restore routing
                                      # (check_plan returns "reshard" instead
                                      # of refusing on a layout change)
+    ckpt_memory_keep: int = 2        # hot in-memory checkpoint tier (survey
+                                     # §8.3.1, Gemini/CheckFreq): RAM ring of
+                                     # the last K snapshots, restored before
+                                     # any disk walk; 0 disables the tier
+    peer_redundancy: bool = True     # mirror each host-group's RAM shards
+                                     # onto its ring neighbor (host-side
+                                     # stand-in for the fleet's ring
+                                     # ppermute) so a lost group rebuilds
+                                     # from surviving peers without disk
+    preempt_grace: float = 30.0      # seconds between the preemption notice
+                                     # (SIGTERM/SIGUSR1) and the kill: the
+                                     # just-in-time snapshot must fit here;
+                                     # ft/preempt.choose_tier picks disk when
+                                     # measured persist time fits, RAM
+                                     # otherwise
+    flight_len: int = 256            # crash flight recorder ring capacity
+                                     # (events, not steps); the ring is
+                                     # dumped to JSON on preemption, crash,
+                                     # or RecoveryExhausted
 
     def validate(self) -> None:
         for knob in ("nan", "spike", "repeated_spike", "hang", "sdc",
@@ -469,6 +504,15 @@ class RecoveryPolicy:
         if not 0.0 < self.rescue_lr_scale <= 1.0:
             raise ValueError(
                 f"rescue_lr_scale must be in (0, 1], got {self.rescue_lr_scale}")
+        if self.ckpt_memory_keep < 0:
+            raise ValueError(
+                f"ckpt_memory_keep must be >= 0, got {self.ckpt_memory_keep}")
+        if self.preempt_grace <= 0.0:
+            raise ValueError(
+                f"preempt_grace must be > 0, got {self.preempt_grace}")
+        if self.flight_len < 1:
+            raise ValueError(
+                f"flight_len must be >= 1, got {self.flight_len}")
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,14 @@
 
 - :mod:`repro.ft.anomaly` — statistical detectors (nan/inf, spike, hang)
   plus externally-noted kinds (sdc, ckpt_io);
-- :mod:`repro.ft.recovery` — the policy-table recovery driver;
+- :mod:`repro.ft.recovery` — the policy-table recovery driver, restoring
+  memory-tier-first (:mod:`repro.checkpoint.memory`) with a verified disk
+  walk as the fallback;
+- :mod:`repro.ft.preempt` — SIGTERM/SIGUSR1 preemption guard: just-in-time
+  snapshot within a grace budget, ``PREEMPTED`` marker, clean resumable
+  exit;
+- :mod:`repro.ft.flight` — the crash flight recorder: a bounded ring of
+  per-step events dumped to JSON on preemption/crash/RecoveryExhausted;
 - :mod:`repro.ft.inject` — deterministic seeded fault injection at named
   fault points (the registry is ``inject.FAULT_POINTS``; see that module's
   docstring for how to add a point);
@@ -12,8 +19,13 @@
 
 from repro.core.config import RecoveryPolicy
 from .anomaly import Anomaly, Monitor
+from .flight import FlightRecorder
+from .preempt import (PreemptionGuard, clear_marker, read_marker,
+                      write_marker)
 from .recovery import (RecoveryExhausted, RemeshSpec, RunReport,
                        run_with_recovery)
 
-__all__ = ["Anomaly", "Monitor", "RecoveryExhausted", "RecoveryPolicy",
-           "RemeshSpec", "RunReport", "run_with_recovery"]
+__all__ = ["Anomaly", "FlightRecorder", "Monitor", "PreemptionGuard",
+           "RecoveryExhausted", "RecoveryPolicy", "RemeshSpec", "RunReport",
+           "clear_marker", "read_marker", "run_with_recovery",
+           "write_marker"]

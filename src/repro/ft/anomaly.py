@@ -31,7 +31,7 @@ class Anomaly:
 class Monitor:
     def __init__(self, window: int = 32, spike_mads: float = 10.0,
                  hang_factor: float = 5.0, min_history: int = 8,
-                 hang_min_seconds: float = 1e-3):
+                 hang_min_seconds: float = 1e-3, flight=None):
         self.window = window
         self.spike_mads = spike_mads
         self.hang_factor = hang_factor
@@ -39,6 +39,9 @@ class Monitor:
         # absolute floor below which a slow step is never a "hang" — with
         # sub-ms steps the relative test alone would flag scheduler jitter
         self.hang_min_seconds = hang_min_seconds
+        # optional repro.ft.flight.FlightRecorder: every recorded step and
+        # every anomaly (statistical or noted) lands in the crash black box
+        self.flight = flight
         self.losses: Deque[float] = deque(maxlen=window)
         self.times: Deque[float] = deque(maxlen=window)
         self.anomalies: List[Anomaly] = []
@@ -84,6 +87,11 @@ class Monitor:
             self.losses.append(loss)     # only healthy points enter the window
         if out:
             self.anomalies.append(out)
+        if self.flight is not None:
+            self.flight.record("step", step, loss=loss, grad_norm=grad_norm)
+            if out:
+                self.flight.record("anomaly", step, anomaly=out.kind,
+                                   detail=out.detail)
         return out
 
     def note(self, kind: str, step: int, detail: str = "") -> Anomaly:
@@ -93,6 +101,8 @@ class Monitor:
         same audit trail and policy routing."""
         a = Anomaly(kind, step, detail)
         self.anomalies.append(a)
+        if self.flight is not None:
+            self.flight.record("anomaly", step, anomaly=kind, detail=detail)
         return a
 
     def reset_heartbeat(self, now: Optional[float] = None) -> None:

@@ -50,6 +50,23 @@ outputs, checksum inputs) is scheduled without touching the clean step.
 
 After every restore the Monitor's heartbeat is reset: restore wall-time is
 not a step time and must not trip a false hang.
+
+**Tiered restore order** (survey §8.3.1, Gemini/CheckFreq): every restore —
+rollback, lr_rescue, resume — tries the hot in-memory tier first when one is
+attached (``mem_ckpt``): (1) RAM primary shards (no verification — digested
+at save, RAM trusted between save and restore), (2) RAM peer rebuild from
+ring-neighbor mirrors (always digest-verified), and only then (3) the disk
+walk, newest-intact first with full integrity verification, taking
+``restore_resharded`` when the layout changed (remesh). The memory tier is
+cleared on remesh (its recorded layouts are stale) and is not consulted for
+cross-layout restores — elasticity is the disk tier's job.
+
+**Exit discipline**: the checkpoint manager is flushed (``ckpt.wait()``) in
+a ``finally`` on *every* exit path, and when a
+:class:`repro.ft.flight.FlightRecorder` is attached its ring is dumped to
+JSON on preemption and on any exception exit (``RecoveryExhausted`` carries
+``flight_path``), so no failure leaves silently and every failure leaves a
+black box.
 """
 
 from __future__ import annotations
@@ -59,7 +76,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.checkpoint.store import CheckpointManager, CorruptCheckpointError
 from repro.core.config import RecoveryPolicy
+from . import inject as _inject
 from .anomaly import Anomaly, Monitor
+from .preempt import choose_tier, clear_marker, read_marker, write_marker
 
 
 class RecoveryExhausted(RuntimeError):
@@ -70,6 +89,9 @@ class RecoveryExhausted(RuntimeError):
         super().__init__(f"giving up after {restores} restores: {anomaly}")
         self.restores = restores
         self.anomaly = anomaly
+        # set by run_with_recovery when a flight recorder is attached: the
+        # JSON black box dumped on the way out (the autopsy artifact)
+        self.flight_path: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -101,6 +123,15 @@ class RunReport:
     actions: List[Tuple[int, str, str]] = dataclasses.field(default_factory=list)
     # corrupt checkpoints skipped by fallback restores
     ckpt_fallbacks: int = 0
+    # restores served by the hot in-memory tier (subset of ``restores``);
+    # the remainder walked the disk tier
+    mem_restores: int = 0
+    # graceful preemption exit: the run stopped early at ``preempt_step``
+    # after a just-in-time snapshot (resume with ``resume=True``)
+    preempted: bool = False
+    preempt_step: Optional[int] = None
+    # where the flight recorder dumped its JSON (preemption/crash), if at all
+    flight_path: Optional[str] = None
 
 
 def run_with_recovery(
@@ -120,6 +151,10 @@ def run_with_recovery(
     remesh: Optional[Callable[[], RemeshSpec]] = None,
     resume: bool = False,
     fault_step_fn: Optional[Callable[[int], Optional[Callable]]] = None,
+    mem_ckpt=None,
+    mem_every: int = 1,
+    preempt=None,
+    flight=None,
 ) -> Tuple[Any, RunReport]:
     """Run ``n_steps`` with periodic checkpointing and anomaly-driven recovery.
 
@@ -136,24 +171,84 @@ def run_with_recovery(
     :class:`RemeshSpec` the run continues under. ``resume=True`` picks up
     from the latest checkpoint already in ``ckpt`` (resharding onto
     ``state``'s layout if it was written on a different one) instead of
-    saving a fresh step-0 checkpoint.
+    saving a fresh step-0 checkpoint; a ``PREEMPTED`` marker left by a
+    prior graceful preemption is consumed (logged + cleared) on resume.
+
+    Fast-recovery tier (survey §8.3.1): ``mem_ckpt`` (a
+    :class:`repro.checkpoint.memory.MemoryCheckpointTier`) snapshots the
+    state into host RAM every ``mem_every`` accepted steps, and every
+    restore tries it *first* — rollbacks land on the newest RAM snapshot
+    (at most ``mem_every - 1`` steps of replay instead of up to
+    ``ckpt_every - 1``) and fall back to the verified disk walk when the
+    tier can't serve (empty, layout mismatch after remesh, shards lost
+    beyond the peer mirrors). A remesh clears it (recorded layouts are
+    stale on the new mesh).
+
+    ``preempt`` (a :class:`repro.ft.preempt.PreemptionGuard`) is checked
+    between steps: on a preemption notice the driver flushes the in-flight
+    async persist, takes a just-in-time blocking snapshot on the tier
+    :func:`repro.ft.preempt.choose_tier` picks from the grace budget vs
+    measured persist time, writes the ``PREEMPTED`` marker, dumps the
+    flight recorder, and returns ``RunReport(preempted=True, ...)``.
+
+    ``flight`` (a :class:`repro.ft.flight.FlightRecorder`) collects the
+    per-step black box: the driver logs policy decisions, restores (with
+    the serving tier), injected faults that fired, and preemption; it is
+    dumped to JSON on preemption and on *any* exception exit — including
+    :class:`RecoveryExhausted`, which carries ``flight_path`` — and the
+    path lands on the report. The checkpoint manager's background persist
+    is flushed (``ckpt.wait()``) in a ``finally`` on every exit path, so a
+    failed persist always surfaces as a ``ckpt_io`` anomaly instead of
+    dying silently with its thread.
     """
     monitor = monitor or Monitor()
     policy = policy or RecoveryPolicy(max_restores=max_restores)
     policy.validate()
+    if flight is not None:
+        # one black box for the whole stack: detector, store, and hot tier
+        # all log into the driver's recorder unless wired to their own
+        if getattr(monitor, "flight", None) is None:
+            monitor.flight = flight
+        if getattr(ckpt, "flight", None) is None:
+            ckpt.flight = flight
+        if mem_ckpt is not None and getattr(mem_ckpt, "flight", None) is None:
+            mem_ckpt.flight = flight
     losses: List[float] = []
     actions: List[Tuple[int, str, str]] = []
     restores = 0
     remeshes = 0
     fallbacks = 0
+    mem_restores = 0
     spike_counts: Dict[int, int] = {}
     rescue_mode: Dict[int, str] = {}   # step -> "rescue" | "skip", sticky
     step = 0
 
     def _restore(template, shardings=None, the_plan=None, the_mesh=None):
-        """Newest-intact restore: walk checkpoints newest-first, skipping any
-        that fail integrity verification (the keep-last-K fallback)."""
-        nonlocal fallbacks
+        """Tiered restore — memory first, then the verified disk walk.
+
+        Tier 1/2: the hot RAM ring (primary shards, then peer rebuild from
+        neighbor mirrors — both inside ``mem_ckpt.restore``). Tier 3: walk
+        disk checkpoints newest-first, skipping any that fail integrity
+        verification (the keep-last-K fallback)."""
+        nonlocal fallbacks, mem_restores
+        if mem_ckpt is not None:
+            try:
+                got, tree = mem_ckpt.restore(template, plan=the_plan,
+                                             mesh=the_mesh)
+            except (CorruptCheckpointError, ValueError, AssertionError) as e:
+                # can't serve (empty / lost shards / layout change) — disk
+                if flight is not None:
+                    flight.record("restore_miss", step, tier="memory",
+                                  error=repr(e))
+            else:
+                mem_restores += 1
+                monitor.reset_heartbeat()
+                if flight is not None:
+                    flight.record("restore", got,
+                                  tier=("memory-rebuild"
+                                        if mem_ckpt.last_rebuild else "memory"),
+                                  rebuilt_shards=mem_ckpt.last_rebuild)
+                return got, tree
         candidates = ckpt.steps(newest_first=True)
         if not candidates:
             raise FileNotFoundError(f"no checkpoints in {ckpt.dir}")
@@ -175,6 +270,8 @@ def run_with_recovery(
                 last_err = e
                 continue
             monitor.reset_heartbeat()  # restore wall-time is not a step time
+            if flight is not None:
+                flight.record("restore", got, tier="disk", route=route)
             return got, tree
         raise last_err                 # every checkpoint on disk is corrupt
 
@@ -191,93 +288,177 @@ def run_with_recovery(
             actions.append((s, "ckpt_io", policy.ckpt_io))
             return a
 
+    def _mem_save(s, st):
+        if mem_ckpt is not None and s % max(1, mem_every) == 0:
+            mem_ckpt.save(s, st, plan=plan, mesh=mesh)
+
+    def _report(**over) -> RunReport:
+        base = dict(steps_done=step, anomalies=monitor.anomalies,
+                    restores=restores, losses=losses, remeshes=remeshes,
+                    actions=actions, ckpt_fallbacks=fallbacks,
+                    mem_restores=mem_restores)
+        base.update(over)
+        return RunReport(**base)
+
     if resume and ckpt.latest_step() is not None:
+        marker = read_marker(ckpt.dir)
+        if marker is not None:
+            # consume the graceful-preemption marker: log the handoff and
+            # clear it so a later crash isn't misread as another preemption
+            if flight is not None:
+                flight.record("resume_after_preempt",
+                              int(marker.get("step", -1)),
+                              tier=marker.get("tier"))
+            clear_marker(ckpt.dir)
         step, state = _restore(state, the_plan=plan, the_mesh=mesh)
         losses = [float("nan")] * step     # pre-resume slots are unknown
     else:
         _try_save(step, state, blocking=True)
-
-    while step < n_steps:
-        mode = rescue_mode.get(step)
-        if mode == "skip":
-            losses.append(float("nan"))    # batch dropped by lr_rescue policy
-            step += 1
-            if step % ckpt_every == 0:
-                _try_save(step, state)
-            continue
-
-        cur = state
-        if fault_injector is not None:
-            cur = fault_injector(step, cur)
-        fn = rescue_step if (mode == "rescue" and rescue_step) else train_step
-        if fault_step_fn is not None:
-            faulty = fault_step_fn(step)
-            if faulty is not None:
-                fn = faulty
-        new_state, metrics = fn(cur, get_batch(step))
-        loss = float(metrics["loss"])
-        gnorm = float(metrics.get("grad_norm", 0.0))
-        div = float(metrics.get("integrity_div", 0.0))
-        anomaly = monitor.record(step, loss, gnorm)
-        if div != 0.0:
-            # replica checksum divergence outranks the statistical detectors:
-            # the step's own outputs cannot be trusted, whatever they look like
-            anomaly = monitor.note("sdc", step, f"integrity_div={div}")
-        if anomaly is not None and mode == "rescue" and anomaly.kind == "spike":
-            anomaly = None                 # the rescue step owns this spike
-
-        if anomaly is not None:
-            if anomaly.kind == "spike":
-                spike_counts[step] = spike_counts.get(step, 0) + 1
-                action = (policy.spike if spike_counts[step] == 1
-                          else policy.repeated_spike)
-            else:
-                action = getattr(policy, anomaly.kind)
-            if action == "remesh" and (anomaly.kind != "hang" or remesh is None):
-                action = "ignore"          # no hook / not a hang: advisory only
-            actions.append((step, anomaly.kind, action))
-
-            if action in ("rollback", "lr_rescue"):
-                if restores >= policy.max_restores:
-                    raise RecoveryExhausted(restores, anomaly)
-                if action == "lr_rescue":
-                    rescue_mode[step] = "rescue" if rescue_step else "skip"
-                step, state = _restore(state, the_plan=plan, the_mesh=mesh)
-                restores += 1
-                del losses[step:]
-                continue
-            if action == "remesh":
-                if restores >= policy.max_restores:
-                    raise RecoveryExhausted(restores, anomaly)
-                spec = remesh()
-                step, state = _restore(spec.state_template, spec.shardings,
-                                       spec.plan, spec.mesh)
-                train_step = spec.train_step
-                plan, mesh = spec.plan, spec.mesh
-                if spec.rescue_step is not None:
-                    rescue_step = spec.rescue_step
-                restores += 1
-                remeshes += 1
-                del losses[step:]
-                continue
-            # "ignore": fall through and accept the step
-
-        state = new_state
-        losses.append(loss)
-        step += 1
-        if step % ckpt_every == 0:
-            a = _try_save(step, state)
-            if a is not None and policy.ckpt_io == "rollback":
-                if restores >= policy.max_restores:
-                    raise RecoveryExhausted(restores, a)
-                step, state = _restore(state, the_plan=plan, the_mesh=mesh)
-                restores += 1
-                del losses[step:]
+    _mem_save(step, state)
 
     try:
-        ckpt.wait()
-    except (OSError, RuntimeError) as e:
-        monitor.note("ckpt_io", step, repr(e))
-        actions.append((step, "ckpt_io", policy.ckpt_io))
-    return state, RunReport(step, monitor.anomalies, restores, losses,
-                            remeshes, actions, fallbacks)
+        while step < n_steps:
+            if preempt is not None and preempt.requested:
+                # graceful preemption: flush the in-flight persist first (a
+                # background failure must not pass for a durable
+                # checkpoint), then a just-in-time blocking snapshot on
+                # whichever tier fits the remaining grace budget
+                try:
+                    ckpt.wait()
+                except (OSError, RuntimeError) as e:
+                    monitor.note("ckpt_io", step, repr(e))
+                    actions.append((step, "ckpt_io", policy.ckpt_io))
+                tier = choose_tier(preempt, ckpt, mem_ckpt)
+                if tier == "memory":
+                    mem_ckpt.save(step, state, plan=plan, mesh=mesh)
+                else:
+                    _try_save(step, state, blocking=True)
+                if flight is not None:
+                    flight.record("preempt", step, tier=tier,
+                                  signum=preempt.signum,
+                                  grace_left=preempt.remaining())
+                fp = flight.dump("preempt") if flight is not None else None
+                write_marker(ckpt.dir, step, tier, preempt.signum, fp)
+                return state, _report(preempted=True, preempt_step=step,
+                                      flight_path=fp)
+
+            mode = rescue_mode.get(step)
+            if mode == "skip":
+                losses.append(float("nan"))  # batch dropped by lr_rescue
+                step += 1
+                if step % ckpt_every == 0:
+                    _try_save(step, state)
+                _mem_save(step, state)
+                continue
+
+            cur = state
+            n_fired = len(_inject.CONTROLLER.fired)
+            if fault_injector is not None:
+                cur = fault_injector(step, cur)
+            fn = (rescue_step if (mode == "rescue" and rescue_step)
+                  else train_step)
+            if fault_step_fn is not None:
+                faulty = fault_step_fn(step)
+                if faulty is not None:
+                    fn = faulty
+            new_state, metrics = fn(cur, get_batch(step))
+            loss = float(metrics["loss"])
+            gnorm = float(metrics.get("grad_norm", 0.0))
+            div = float(metrics.get("integrity_div", 0.0))
+            if flight is not None:
+                for point, kind, fstep in \
+                        _inject.CONTROLLER.fired[n_fired:]:
+                    flight.record("fault", step, point=point,
+                                  fault_kind=kind, armed_step=fstep)
+            anomaly = monitor.record(step, loss, gnorm)
+            if div != 0.0:
+                # replica checksum divergence outranks the statistical
+                # detectors: the step's own outputs cannot be trusted,
+                # whatever they look like
+                anomaly = monitor.note("sdc", step, f"integrity_div={div}")
+            if anomaly is not None and mode == "rescue" \
+                    and anomaly.kind == "spike":
+                anomaly = None             # the rescue step owns this spike
+
+            if anomaly is not None:
+                if anomaly.kind == "spike":
+                    spike_counts[step] = spike_counts.get(step, 0) + 1
+                    action = (policy.spike if spike_counts[step] == 1
+                              else policy.repeated_spike)
+                else:
+                    action = getattr(policy, anomaly.kind)
+                if action == "remesh" and (anomaly.kind != "hang"
+                                           or remesh is None):
+                    action = "ignore"      # no hook / not a hang: advisory
+                actions.append((step, anomaly.kind, action))
+                if flight is not None:
+                    flight.record("policy", step, anomaly=anomaly.kind,
+                                  action=action, detail=anomaly.detail)
+
+                if action in ("rollback", "lr_rescue"):
+                    if restores >= policy.max_restores:
+                        raise RecoveryExhausted(restores, anomaly)
+                    if action == "lr_rescue":
+                        rescue_mode[step] = ("rescue" if rescue_step
+                                             else "skip")
+                    step, state = _restore(state, the_plan=plan,
+                                           the_mesh=mesh)
+                    restores += 1
+                    del losses[step:]
+                    continue
+                if action == "remesh":
+                    if restores >= policy.max_restores:
+                        raise RecoveryExhausted(restores, anomaly)
+                    spec = remesh()
+                    if mem_ckpt is not None:
+                        # the world was rebuilt: RAM snapshots recorded on
+                        # the old layout are gone with their hosts
+                        mem_ckpt.clear()
+                    step, state = _restore(spec.state_template,
+                                           spec.shardings,
+                                           spec.plan, spec.mesh)
+                    train_step = spec.train_step
+                    plan, mesh = spec.plan, spec.mesh
+                    if spec.rescue_step is not None:
+                        rescue_step = spec.rescue_step
+                    restores += 1
+                    remeshes += 1
+                    del losses[step:]
+                    continue
+                # "ignore": fall through and accept the step
+
+            state = new_state
+            losses.append(loss)
+            step += 1
+            if step % ckpt_every == 0:
+                a = _try_save(step, state)
+                if a is not None and policy.ckpt_io == "rollback":
+                    if restores >= policy.max_restores:
+                        raise RecoveryExhausted(restores, a)
+                    step, state = _restore(state, the_plan=plan,
+                                           the_mesh=mesh)
+                    restores += 1
+                    del losses[step:]
+                    continue
+            _mem_save(step, state)
+    except BaseException as e:
+        if flight is not None:
+            # the autopsy artifact: dump the black box and pin its path on
+            # the exception so the caller can find it without a report
+            fp = flight.dump(reason=type(e).__name__,
+                             extra={"step": step, "error": repr(e)})
+            try:
+                e.flight_path = fp
+            except Exception:       # exotic exception types w/ slots
+                pass
+        raise
+    finally:
+        # flush the background persist on EVERY exit path — normal return,
+        # preemption, crash, RecoveryExhausted — so a failed persist
+        # surfaces as a ckpt_io anomaly instead of dying with its thread
+        try:
+            ckpt.wait()
+        except (OSError, RuntimeError) as e:
+            monitor.note("ckpt_io", step, repr(e))
+            actions.append((step, "ckpt_io", policy.ckpt_io))
+    return state, _report()

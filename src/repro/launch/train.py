@@ -12,6 +12,16 @@ anomaly-driven recovery (survey §8): NaN/spike -> rollback-and-replay,
 repeated spike -> LR-rescue, hang -> advisory or elastic remesh. ``--resume``
 continues from the latest checkpoint in ``--ckpt-dir`` — including one
 written on a *different* mesh layout (elastic reshard-restore, §8.3.2).
+
+Fast-recovery layer (§8.3.1): ``--ckpt-memory-keep K`` keeps a hot RAM ring
+of the last K snapshots (peer-mirrored unless ``--no-peer-redundancy``) that
+every rollback restores from before touching disk. A SIGTERM/SIGUSR1
+(spot-instance preemption notice) is caught between steps: the driver takes
+a just-in-time snapshot within ``--preempt-grace`` seconds, writes a
+``PREEMPTED`` marker, and exits 0 — rerun with ``--resume`` to continue
+bit-identically. ``--flight-path`` arms the crash flight recorder: a
+bounded ring of per-step events dumped to JSON on preemption, crash, or
+recovery exhaustion for post-mortem attribution.
 """
 
 from __future__ import annotations
@@ -25,9 +35,10 @@ import jax.numpy as jnp
 
 from repro.core import ARCH_IDS, InputShape, ParallelPlan, RecoveryPolicy
 from repro.core.config import RECOVERY_ACTIONS, Family
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, MemoryCheckpointTier
 from repro.data import SyntheticDataset
-from repro.ft import Monitor, run_with_recovery
+from repro.ft import FlightRecorder, Monitor, run_with_recovery
+from repro.ft.preempt import PreemptionGuard
 from repro.launch.mesh import batch_axes_for, make_local_mesh
 from repro.launch.stepbuilder import resolve_config
 from repro.models import build_model
@@ -89,6 +100,25 @@ def main() -> None:
     ap.add_argument("--on-sdc", default="rollback", choices=RECOVERY_ACTIONS,
                     help="recovery action when the integrity audit detects "
                          "replica checksum divergence")
+    ap.add_argument("--ckpt-memory-keep", type=int, default=2,
+                    help="hot in-memory checkpoint tier (survey §8.3.1): RAM "
+                         "ring of the last K snapshots restored before any "
+                         "disk walk; 0 disables the tier")
+    ap.add_argument("--no-peer-redundancy", dest="peer_redundancy",
+                    action="store_false", default=True,
+                    help="skip mirroring each host-group's RAM shards onto "
+                         "its ring neighbor (halves hot-tier RAM, loses "
+                         "tolerance to a lost host-group)")
+    ap.add_argument("--preempt-grace", type=float, default=30.0,
+                    help="seconds of grace between a preemption notice "
+                         "(SIGTERM/SIGUSR1) and the kill; the just-in-time "
+                         "snapshot tier is chosen so it fits this budget")
+    ap.add_argument("--flight-len", type=int, default=256,
+                    help="crash flight recorder ring capacity (events)")
+    ap.add_argument("--flight-path", default=None,
+                    help="where the flight recorder dumps its JSON on "
+                         "preemption/crash/exhaustion (default: "
+                         "<ckpt-dir>/flight.json)")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, "train_4k", smoke=args.smoke)
@@ -113,14 +143,27 @@ def main() -> None:
     step_fn = jax.jit(make_train_step(model, plan, hyper, mesh=mesh),
                       donate_argnums=(0,))
     ds = SyntheticDataset(cfg, shape)
+    flight = FlightRecorder(
+        maxlen=args.flight_len,
+        path=args.flight_path or f"{args.ckpt_dir}/flight.json")
     ckpt = CheckpointManager(args.ckpt_dir, keep=2,
-                             async_snapshot=args.async_snapshot)
-    monitor = Monitor()
+                             async_snapshot=args.async_snapshot,
+                             flight=flight)
+    monitor = Monitor(flight=flight)
     policy = RecoveryPolicy(
         nan=args.on_nan, spike=args.on_spike,
         repeated_spike=args.on_repeated_spike, hang=args.on_hang,
         sdc=args.on_sdc, max_restores=args.max_restores,
-        rescue_lr_scale=args.rescue_lr_scale)
+        rescue_lr_scale=args.rescue_lr_scale,
+        ckpt_memory_keep=args.ckpt_memory_keep,
+        peer_redundancy=args.peer_redundancy,
+        preempt_grace=args.preempt_grace, flight_len=args.flight_len)
+    mem_ckpt = None
+    if policy.ckpt_memory_keep > 0:
+        mem_ckpt = MemoryCheckpointTier(
+            keep=policy.ckpt_memory_keep,
+            peer_redundancy=policy.peer_redundancy,
+            groups=max(2, n_dev), flight=flight)
     rescue_fn = None
     if "lr_rescue" in (policy.spike, policy.repeated_spike,
                        policy.nan, policy.hang):
@@ -138,18 +181,27 @@ def main() -> None:
             time.sleep(2.0)
         return st
 
-    state, report = run_with_recovery(
-        state, step_fn, get_batch, args.steps, ckpt, monitor,
-        ckpt_every=args.ckpt_every, plan=plan, mesh=mesh, policy=policy,
-        rescue_step=rescue_fn, resume=args.resume,
-        fault_injector=injector if args.simulate_hang_at >= 0 else None)
+    with PreemptionGuard(grace=policy.preempt_grace) as guard:
+        state, report = run_with_recovery(
+            state, step_fn, get_batch, args.steps, ckpt, monitor,
+            ckpt_every=args.ckpt_every, plan=plan, mesh=mesh, policy=policy,
+            rescue_step=rescue_fn, resume=args.resume,
+            fault_injector=injector if args.simulate_hang_at >= 0 else None,
+            mem_ckpt=mem_ckpt, preempt=guard, flight=flight)
 
     dt = time.time() - t_start
+    if report.preempted:
+        print(f"[train] preempted at step {report.preempt_step} "
+              f"(signal {guard.signum}): just-in-time snapshot taken, "
+              f"PREEMPTED marker written, flight log at "
+              f"{report.flight_path}; rerun with --resume to continue")
+        return
     tokens = args.steps * args.batch * args.seq
     print(f"[train] {args.steps} steps in {dt:.1f}s "
           f"({tokens/dt:.0f} tok/s), loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f}, anomalies={len(report.anomalies)}, "
-          f"restores={report.restores}, remeshes={report.remeshes}")
+          f"restores={report.restores} (memory-tier {report.mem_restores}), "
+          f"remeshes={report.remeshes}")
     for step, kind, action in report.actions:
         print(f"[train]   step {step}: {kind} -> {action}")
     print(f"[train] ckpt snapshot {ckpt.snapshot_seconds*1e3:.1f}ms "
