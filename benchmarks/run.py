@@ -854,6 +854,136 @@ def bench_decode():
         emit(f"decode.ctx{t}", us, f"cache_bytes={cache_bytes}")
 
 
+# ---------------------------------------------------------------------------
+# survey §8.1 (fail-slow defense: detection latency + rebalance recovery)
+
+def bench_straggler():
+    """Fail-slow economics on a 2-stage pipeline (survey §8.1, Malleus):
+    tokens/s in three regimes — healthy baseline, degraded (a seeded ``slow``
+    fault adds per-layer host delay to stage 1), and rebalanced (the Malleus
+    ``pp_layout`` chosen by the straggler ladder) — plus the detector's
+    attribution latency in steps. Asserts the rebalanced regime is strictly
+    faster than the degraded one and recovers >= 25% of the lost step-time
+    overhead (theoretical for this shape: shedding 1 of stage 1's 2 layers
+    halves the injected delay, ~50%; the bound leaves headroom for host
+    noise)."""
+    script = """
+import dataclasses, tempfile, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.core import (Family, InputShape, ModelConfig, ParallelPlan,
+                        RecoveryPolicy)
+from repro.data import SyntheticDataset
+from repro.ft import (Monitor, RemeshSpec, StragglerDetector, StragglerTimer,
+                      run_with_recovery)
+from repro.ft.inject import FaultSpec, armed
+from repro.models import build_model
+from repro.train.pipeline import pipelined_loss_fn
+
+cfg = ModelConfig("bench", Family.DENSE, n_layers=4, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128)
+mesh = jax.make_mesh((2, 2), ("pod", "data"))
+plan = ParallelPlan(remat="none", compute_dtype="float32", pp=2,
+                    microbatches=4)
+SEQ, BATCH = 32, 8
+ds = SyntheticDataset(cfg, InputShape("b", SEQ, BATCH, "train"))
+get_batch = lambda s: {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+model = build_model(cfg, ParallelPlan(remat="none", compute_dtype="float32"))
+state0 = {"params": model.init(jax.random.PRNGKey(0))}
+
+def make_step(pl):
+    lf = pipelined_loss_fn(cfg, pl, mesh, ("data",))
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p, b: lf(p, b)[0])(state["params"], batch)
+        params = jax.tree.map(lambda p, g: p - 1e-3 * g,
+                              state["params"], grads)
+        return {"params": params}, {"loss": loss,
+                                    "grad_norm": jnp.float32(1.0)}
+    return jax.jit(step)
+
+# the injected per-layer delay must dominate the healthy step time for the
+# regime arithmetic to be about the fault (shedding a layer also shifts
+# compute onto the bottleneck stage — the real Malleus tradeoff)
+SLEEP, FAULT_STEP, CONFIRM = 0.15, 6, 3
+fault = lambda: FaultSpec("pp.stage.tick", "slow", step=0, span=10**6,
+                          rank=1, sleep_s=SLEEP)
+
+def regime(layout, faulted, n=6):
+    '''Median full step wall time (jitted step + timer fan-out, which
+    executes any armed slow delay) under the given layout/fault regime.'''
+    pl = dataclasses.replace(plan, pp_layout=layout)
+    step_fn = make_step(pl)
+    timer = StragglerTimer(cfg=cfg, plan=pl,
+                           detector=StragglerDetector(confirm=10**6))
+    st = state0
+    st, m = step_fn(st, get_batch(0)); float(m["loss"])   # compile
+    ts = []
+    specs = [fault()] if faulted else []
+    with armed(specs):
+        for s in range(1, n):
+            b = get_batch(s)
+            t0 = time.perf_counter()
+            st, m = step_fn(st, b)
+            float(m["loss"])
+            timer.after_step(s, time.perf_counter() - t0)
+            ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+t_base = regime(None, False)
+t_deg = regime(None, True)
+t_reb = regime((3, 1), True)
+
+# the e2e ladder, for the detection latency + the applied layout
+detector = StragglerDetector(window=8, factor=2.0, confirm=CONFIRM,
+                             min_seconds=1e-3)
+timer = StragglerTimer(cfg=cfg, plan=plan, detector=detector)
+applied = []
+def rebalance(layout):
+    applied.append(tuple(layout))
+    pl2 = dataclasses.replace(plan, pp_layout=tuple(layout))
+    return RemeshSpec(train_step=make_step(pl2), state_template=state0,
+                      plan=pl2, mesh=mesh)
+ckpt = CheckpointManager(tempfile.mkdtemp(), keep=4, async_persist=False)
+with armed([dataclasses.replace(fault(), step=FAULT_STEP)]):
+    final, report = run_with_recovery(
+        state0, make_step(plan), get_batch, 14, ckpt,
+        Monitor(hang_min_seconds=60.0), ckpt_every=3, plan=plan, mesh=mesh,
+        policy=RecoveryPolicy(straggler="rebalance", max_restores=4,
+                              straggler_confirm=CONFIRM),
+        straggler=timer, rebalance=rebalance)
+strag = [a for a in report.anomalies if a.kind == "straggler"]
+assert strag and report.rebalances == 1, (strag, report)
+assert applied[0] == (3, 1), applied
+detect_steps = strag[0].step - FAULT_STEP + 1
+assert detect_steps <= CONFIRM, (strag[0].step, FAULT_STEP)
+
+toks = SEQ * BATCH
+assert t_reb < t_deg, (t_reb, t_deg)      # rebalance strictly recovers
+frac = (t_deg - t_reb) / max(t_deg - t_base, 1e-9)
+assert frac >= 0.25, (t_base, t_deg, t_reb, frac)
+print(f"BENCH detect_steps={detect_steps} base_us={t_base*1e6:.1f} "
+      f"deg_us={t_deg*1e6:.1f} reb_us={t_reb*1e6:.1f} "
+      f"tps_base={toks/t_base:.0f} tps_deg={toks/t_deg:.0f} "
+      f"tps_reb={toks/t_reb:.0f} frac={frac:.3f}")
+print("STRAGGLER_BENCH_OK", flush=True)
+"""
+    out = run_multidevice(script, 4, "STRAGGLER_BENCH_OK", timeout=1200)
+    kv = dict(tok.split("=") for line in out.splitlines()
+              if line.startswith("BENCH ") for tok in line.split()[1:])
+    emit("straggler.detect.latency", float(kv["detect_steps"]),
+         f"steps={kv['detect_steps']};confirm=3")
+    emit("straggler.tokens_per_s.baseline", float(kv["base_us"]),
+         f"tokens_per_s={kv['tps_base']}")
+    emit("straggler.tokens_per_s.degraded", float(kv["deg_us"]),
+         f"tokens_per_s={kv['tps_deg']};fault=slow@stage1")
+    emit("straggler.tokens_per_s.rebalanced", float(kv["reb_us"]),
+         f"tokens_per_s={kv['tps_reb']};pp_layout=(3,1)")
+    emit("straggler.rebalance.recovery",
+         float(kv["deg_us"]) - float(kv["reb_us"]),
+         f"overhead_recovered={kv['frac']};bound=0.25;theoretical~0.5")
+
+
 BENCHES = {
     "attention": bench_attention,
     "memory": bench_memory_sharding,
@@ -868,6 +998,7 @@ BENCHES = {
     "ft": bench_fault_tolerance,
     "integrity": bench_integrity,
     "decode": bench_decode,
+    "straggler": bench_straggler,
 }
 
 
@@ -1073,6 +1204,76 @@ print("ELASTIC_OK", flush=True)
                 warmup=0, iters=1)
     emit("quick.ft.elastic", us,
          "mesh=2x2_to_1x2;remesh=1;losses_bitmatch_reference=True")
+
+    # fail-slow smoke (survey §8.1): a seeded slow fault on pipeline stage 1
+    # must be attributed (rank, compute) within the confirm window and the
+    # straggler ladder must rebalance pp_layout through an elastic
+    # checkpoint reshard restore, completing the run on the uneven layout
+    script = """
+import dataclasses, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.core import (Family, InputShape, ModelConfig, ParallelPlan,
+                        RecoveryPolicy)
+from repro.data import SyntheticDataset
+from repro.ft import (Monitor, RemeshSpec, StragglerDetector, StragglerTimer,
+                      run_with_recovery)
+from repro.ft.inject import FaultSpec, armed
+from repro.models import build_model
+from repro.train.pipeline import pipelined_loss_fn
+
+cfg = ModelConfig("q", Family.DENSE, n_layers=4, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64)
+mesh = jax.make_mesh((2, 2), ("pod", "data"))
+plan = ParallelPlan(remat="none", compute_dtype="float32", pp=2,
+                    microbatches=4)
+ds = SyntheticDataset(cfg, InputShape("q", 16, 8, "train"))
+get_batch = lambda s: {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
+model = build_model(cfg, ParallelPlan(remat="none", compute_dtype="float32"))
+state0 = {"params": model.init(jax.random.PRNGKey(0))}
+
+def make_step(pl):
+    lf = pipelined_loss_fn(cfg, pl, mesh, ("data",))
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p, b: lf(p, b)[0])(state["params"], batch)
+        params = jax.tree.map(lambda p, g: p - 1e-3 * g,
+                              state["params"], grads)
+        return {"params": params}, {"loss": loss,
+                                    "grad_norm": jnp.float32(1.0)}
+    return jax.jit(step)
+
+detector = StragglerDetector(window=8, factor=2.0, confirm=2,
+                             min_seconds=1e-3)
+timer = StragglerTimer(cfg=cfg, plan=plan, detector=detector)
+applied = []
+def rebalance(layout):
+    applied.append(tuple(layout))
+    pl2 = dataclasses.replace(plan, pp_layout=tuple(layout))
+    return RemeshSpec(train_step=make_step(pl2), state_template=state0,
+                      plan=pl2, mesh=mesh)
+ckpt = CheckpointManager(tempfile.mkdtemp(), keep=4, async_persist=False)
+with armed([FaultSpec("pp.stage.tick", "slow", step=5, span=999, rank=1,
+                      sleep_s=0.04)]):
+    final, report = run_with_recovery(
+        state0, make_step(plan), get_batch, 12, ckpt,
+        Monitor(hang_min_seconds=60.0), ckpt_every=3, plan=plan, mesh=mesh,
+        policy=RecoveryPolicy(straggler="rebalance", max_restores=4,
+                              straggler_confirm=2),
+        straggler=timer, rebalance=rebalance)
+strag = [a for a in report.anomalies if a.kind == "straggler"]
+assert strag and strag[0].step <= 5 + 2, (strag, report)
+assert "rank=1" in strag[0].detail and "class=compute" in strag[0].detail
+assert report.rebalances == 1 and applied[0] == (3, 1), (report, applied)
+assert report.steps_done == 12 and np.isfinite(report.losses[-1])
+print("STRAGGLER_OK", flush=True)
+"""
+    us = timeit(lambda: run_multidevice(script, 4, "STRAGGLER_OK",
+                                        timeout=900),
+                warmup=0, iters=1)
+    emit("quick.ft.straggler", us,
+         "fault=slow@stage1;attributed=rank1_compute;"
+         "rebalance=(3,1);reshard_restore=True")
 
     # chaos smoke: a dropped shard write corrupts the newest checkpoint, a
     # bit flip injected into the state three steps later forces a rollback —

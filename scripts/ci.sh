@@ -12,8 +12,10 @@
 # recovered via CRC-verified fallback to the previous intact checkpoint with
 # bit-matching params (quick.ft.chaos) — and the preemption path — a
 # SIGTERM-style notice mid-run answered with a just-in-time snapshot, a
-# PREEMPTED marker, and a bit-identical resume (quick.ft.preempt); records
-# the remat-policy
+# PREEMPTED marker, and a bit-identical resume (quick.ft.preempt) — and the
+# fail-slow path — a seeded slow fault on one pipeline stage attributed to
+# (rank, compute) and rebalanced to an uneven pp_layout through an elastic
+# reshard restore (quick.ft.straggler); records the remat-policy
 # peak-memory/step-time trade-off to BENCH_trainstep.json, the
 # gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json, the
 # gather-vs-ring context-parallel sweep (incl. the S=16k attention-block
@@ -23,7 +25,11 @@
 # >= 10x faster than the verified disk restore, peer rebuild after a lost
 # host-group bit-matching disk, just-in-time snapshot vs grace — to
 # BENCH_recover.json, and the SDC integrity-audit overhead sweep (audit-vs-off
-# step time per family, asserted < 2x) to BENCH_integrity.json (run.py prints
+# step time per family, asserted < 2x) to BENCH_integrity.json, and the
+# fail-slow economics sweep — detection latency in steps plus tokens/s
+# baseline/degraded/rebalanced, rebalanced asserted strictly above degraded
+# with >= 25% of the step-time overhead recovered — to BENCH_straggler.json
+# (run.py prints
 # a one-line delta vs the previous JSON so the perf trajectory is visible in
 # CI logs; a missing previous JSON is reported as a first run, not an error).
 #
@@ -41,3 +47,4 @@ python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log
 python -m benchmarks.run --only ckpt --json BENCH_ckpt.json | tee bench_ckpt.log
 python -m benchmarks.run --only recover --json BENCH_recover.json | tee bench_recover.log
 python -m benchmarks.run --only integrity --json BENCH_integrity.json | tee bench_integrity.log
+python -m benchmarks.run --only straggler --json BENCH_straggler.json | tee bench_straggler.log

@@ -93,19 +93,25 @@ def _inject():
 # the ParallelPlan fields recorded in the manifest (impl/schedule knobs ride
 # along for forensics) ...
 PLAN_AXES = ("tp", "tp_impl", "cp", "cp_impl", "dp_shard", "zero_stage",
-             "ep", "pp", "pp_schedule")
+             "ep", "pp", "pp_schedule", "pp_layout")
 # ... and the subset check_plan actually compares: only the axes that change
 # how saved state maps onto devices. A pure schedule/impl change
 # (gpipe→1f1b, gather→ring) is replay-safe — restore reassembles full
-# arrays and re-places them — so it must not be refused.
-PLAN_LAYOUT_AXES = ("tp", "cp", "dp_shard", "zero_stage", "ep", "pp")
+# arrays and re-places them — so it must not be refused. pp_layout IS
+# compared: a Malleus rebalance changes which layers live on which stage,
+# so under elastic restore it routes "reshard", never a refusal.
+PLAN_LAYOUT_AXES = ("tp", "cp", "dp_shard", "zero_stage", "ep", "pp",
+                    "pp_layout")
 
 
 def _plan_meta(plan) -> Optional[Dict[str, Any]]:
     if plan is None:
         return None
     d = dataclasses.asdict(plan)
-    return {k: d[k] for k in PLAN_AXES if k in d}
+    # tuples (pp_layout) JSON-round-trip as lists; normalize at record time
+    # so manifest-vs-plan comparisons in layout_diffs stay type-stable
+    return {k: list(d[k]) if isinstance(d[k], tuple) else d[k]
+            for k in PLAN_AXES if k in d}
 
 
 def layout_diffs(manifest: Dict[str, Any], plan, mesh=None

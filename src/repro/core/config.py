@@ -45,6 +45,34 @@ knob                                  meaning
                                       of per-step events dumped to JSON on
                                       preemption/crash/RecoveryExhausted
                                       (``--flight-len``, ``--flight-path``)
+``ParallelPlan.pp_layout``            uneven layers-per-stage pipeline
+                                      partition (Malleus-style, survey §8.1):
+                                      tuple summing to ``n_layers``; ``None``
+                                      = even split. A ``pp_layout`` change is
+                                      a *reshard*, not a refusal, so the
+                                      straggler rebalance restarts through
+                                      the elastic checkpoint path
+``RecoveryPolicy.straggler``          action on a fail-slow attribution from
+                                      ``ft/straggler`` (default ``ignore``;
+                                      the ladder is ignore → ``rebalance``
+                                      (re-partition ``pp_layout`` from
+                                      measured per-stage times) → ``remesh``;
+                                      ``--on-straggler``)
+``RecoveryPolicy.straggler_factor``   relative slowdown threshold: a rank is
+                                      slow when its section time exceeds
+                                      ``factor ×`` its peers' median (or its
+                                      own trailing median for global
+                                      sections) (``--straggler-factor``)
+``RecoveryPolicy.straggler_window``   sliding window (observations) of
+                                      per-(section, rank) timings kept by
+                                      the detector (``--straggler-window``)
+``RecoveryPolicy.straggler_confirm``  consecutive slow observations before a
+                                      ``straggler`` anomaly is raised — the
+                                      detection latency in steps
+                                      (``--straggler-confirm``)
+``RecoveryPolicy.straggler_min_seconds``  absolute slowdown floor; below it
+                                      the relative test never fires
+                                      (scheduler jitter guard)
 ====================================  =======================================
 """
 
@@ -279,6 +307,17 @@ class ParallelPlan:
     zero_stage: int = 1            # 0: replicated opt state, 1: shard over data axis
     ep: bool = False               # expert parallelism (all-to-all) for MoE layers
     pp: int = 1                    # pipeline stages over pod axis (1 = pure DP pods)
+    pp_layout: Optional[Tuple[int, ...]] = None
+                                   # layers-per-stage partition for uneven
+                                   # (Malleus-style) pipelining, survey §8.1:
+                                   # a tuple of length pp summing to
+                                   # cfg.n_layers, each stage >= 1 layer.
+                                   # None = the even n_layers/pp split (and
+                                   # then n_layers must divide pp). Uneven
+                                   # layouts are the fail-slow mitigation:
+                                   # a straggling stage gets fewer layers, so
+                                   # a degraded device does less work per
+                                   # tick instead of stalling the whole ring.
     pp_schedule: str = "1f1b"      # pipeline schedule (§4.1.3): "gpipe" is
                                    # fill-drain with reverse-AD through the
                                    # forward scan (keeps O(M) microbatches of
@@ -357,6 +396,13 @@ class ParallelPlan:
                                    # scalar collectives, measured per family
                                    # by BENCH_integrity.json.
 
+    def __post_init__(self):
+        if self.pp_layout is not None:
+            # normalize to a tuple of ints so the frozen plan stays hashable
+            # and JSON-round-tripped layouts ([3, 1]) compare equal
+            object.__setattr__(self, "pp_layout",
+                               tuple(int(x) for x in self.pp_layout))
+
     def validate(self, cfg: ModelConfig) -> None:
         if self.integrity not in ("off", "audit"):
             raise ValueError(
@@ -411,15 +457,30 @@ class ParallelPlan:
             raise ValueError("dp_over_model consumes the model axis; EP needs it")
         if cfg.moe and self.ep and cfg.moe.num_experts % self.tp != 0:
             raise ValueError("num_experts must divide tp for expert parallelism")
-        if self.pp > 1 and cfg.n_layers % self.pp != 0:
-            raise ValueError("n_layers must divide pp")
+        if self.pp_layout is not None:
+            if self.pp <= 1:
+                raise ValueError(
+                    f"pp_layout requires pp > 1, got pp={self.pp}")
+            if len(self.pp_layout) != self.pp:
+                raise ValueError(
+                    f"pp_layout length {len(self.pp_layout)} != pp={self.pp}")
+            if any(x < 1 for x in self.pp_layout):
+                raise ValueError(
+                    f"pp_layout stages need >= 1 layer, got {self.pp_layout}")
+            if sum(self.pp_layout) != cfg.n_layers:
+                raise ValueError(
+                    f"pp_layout {self.pp_layout} sums to "
+                    f"{sum(self.pp_layout)}, expected n_layers={cfg.n_layers}")
+        elif self.pp > 1 and cfg.n_layers % self.pp != 0:
+            raise ValueError(
+                "n_layers must divide pp (or give an explicit pp_layout)")
 
 
 # ---------------------------------------------------------------------------
 # Recovery policy (survey §8): what ft/recovery.run_with_recovery does per
 # anomaly kind reported by ft/anomaly.Monitor.
 
-RECOVERY_ACTIONS = ("rollback", "lr_rescue", "remesh", "ignore")
+RECOVERY_ACTIONS = ("rollback", "lr_rescue", "remesh", "rebalance", "ignore")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -439,6 +500,13 @@ class RecoveryPolicy:
       :meth:`CheckpointManager.restore_resharded` the state (params + the
       ZeRO-1 moments, re-scattered over the new data axis), then continue
       on the shrunken cluster;
+    - ``"rebalance"``: Malleus-style fail-slow mitigation (survey §8.1) —
+      re-partition the pipeline's layers-per-stage (``ParallelPlan.
+      pp_layout``) from the straggler detector's measured per-stage times
+      via the driver's ``rebalance`` hook, restart through an elastic
+      checkpoint reshard-restore, and continue degraded-but-faster; only
+      meaningful for ``straggler`` anomalies attributed to a pipeline
+      stage — other kinds fall back to ``remesh``/``ignore``;
     - ``"ignore"``: log the anomaly and keep going.
     """
     nan: str = "rollback"            # non-finite loss/grad-norm: numerical
@@ -458,6 +526,20 @@ class RecoveryPolicy:
                                      # "audit": a device produced different
                                      # bits — the state cannot be trusted,
                                      # roll back to the last checkpoint
+    straggler: str = "ignore"        # fail-slow attribution from
+                                     # ft/straggler (rank, component,
+                                     # compute|comm|host-io): the response
+                                     # ladder is "ignore" (advisory, the
+                                     # default) -> "rebalance" (uneven
+                                     # pp_layout re-partition from measured
+                                     # per-stage times, restarted through a
+                                     # checkpoint reshard) -> "remesh" (evict
+                                     # the slow rank's host entirely); a
+                                     # rebalance that can't apply (no
+                                     # pipeline, non-stage attribution, or
+                                     # the same stage already rebalanced)
+                                     # escalates to remesh when that hook
+                                     # exists
     ckpt_io: str = "ignore"          # checkpoint persist failed after
                                      # io_retries attempts (ft/inject's
                                      # persist_exc, full disk, ...): the
@@ -491,10 +573,25 @@ class RecoveryPolicy:
                                      # (events, not steps); the ring is
                                      # dumped to JSON on preemption, crash,
                                      # or RecoveryExhausted
+    straggler_factor: float = 2.0    # relative slowdown threshold: a rank is
+                                     # slow when its section time exceeds
+                                     # factor x the median of its peers (or
+                                     # of its own trailing window for
+                                     # global sections)
+    straggler_window: int = 16       # sliding window (observations) kept per
+                                     # (section, rank) by the detector
+    straggler_confirm: int = 3       # consecutive slow observations before
+                                     # the anomaly is raised — this IS the
+                                     # detection latency in steps
+    straggler_min_seconds: float = 5e-3
+                                     # absolute slowdown floor (seconds above
+                                     # baseline); below it the relative test
+                                     # never fires, so scheduler jitter on
+                                     # sub-ms sections can't page anyone
 
     def validate(self) -> None:
         for knob in ("nan", "spike", "repeated_spike", "hang", "sdc",
-                     "ckpt_io"):
+                     "ckpt_io", "straggler"):
             if getattr(self, knob) not in RECOVERY_ACTIONS:
                 raise ValueError(
                     f"{knob} action must be one of {RECOVERY_ACTIONS}, "
@@ -513,6 +610,19 @@ class RecoveryPolicy:
         if self.flight_len < 1:
             raise ValueError(
                 f"flight_len must be >= 1, got {self.flight_len}")
+        if self.straggler_factor <= 1.0:
+            raise ValueError(
+                f"straggler_factor must be > 1, got {self.straggler_factor}")
+        if self.straggler_window < 4:
+            raise ValueError(
+                f"straggler_window must be >= 4, got {self.straggler_window}")
+        if self.straggler_confirm < 1:
+            raise ValueError(
+                f"straggler_confirm must be >= 1, got {self.straggler_confirm}")
+        if self.straggler_min_seconds < 0.0:
+            raise ValueError(
+                f"straggler_min_seconds must be >= 0, "
+                f"got {self.straggler_min_seconds}")
 
 
 # ---------------------------------------------------------------------------

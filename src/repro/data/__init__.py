@@ -1,3 +1,3 @@
-from .pipeline import SyntheticDataset
+from .pipeline import Prefetcher, SyntheticDataset
 
-__all__ = ["SyntheticDataset"]
+__all__ = ["Prefetcher", "SyntheticDataset"]

@@ -14,6 +14,7 @@ decreases — which the example drivers and anomaly-detection tests rely on.
 
 from __future__ import annotations
 
+import concurrent.futures
 from typing import Dict, Optional
 
 import numpy as np
@@ -32,10 +33,33 @@ class SyntheticDataset:
         r = np.random.default_rng(seed + 1)
         self.table = r.integers(0, self.n_states,
                                 size=(self.n_states, self.n_states))
+        # flat view for single-gather transition lookup in _tokens
+        self._flat_table = np.ascontiguousarray(self.table).reshape(-1)
 
     def _tokens(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        """Markov token stream; bit-identical to :meth:`_tokens_loop`.
+
+        All randomness is drawn up front: PCG64 fills a C-order array with
+        the same doubles as the equivalent sequence of per-row calls, so
+        hoisting ``rng.random((seq - 1, batch))`` out of the recurrence
+        preserves every batch ever generated. The order-2 recurrence itself
+        is inherently sequential over t, but the remaining per-t work is a
+        single flat gather + masked copy."""
         out = rng.integers(0, self.n_states, size=(batch, seq + 1))
-        # overwrite with markov structure 90% of the time
+        if seq >= 2:
+            # overwrite with markov structure 90% of the time
+            masks = rng.random((seq - 1, batch)) < 0.9
+            flat, n = self._flat_table, self.n_states
+            for t in range(2, seq + 1):
+                nxt = flat[out[:, t - 1] * n + out[:, t - 2]]
+                np.copyto(out[:, t], nxt, where=masks[t - 2])
+        return out.astype(np.int32)
+
+    def _tokens_loop(self, rng: np.random.Generator, batch: int,
+                     seq: int) -> np.ndarray:
+        """Reference implementation (the original per-step RNG loop); kept
+        for the bit-identity regression test against :meth:`_tokens`."""
+        out = rng.integers(0, self.n_states, size=(batch, seq + 1))
         for t in range(2, seq + 1):
             nxt = self.table[out[:, t - 1], out[:, t - 2]]
             mask = rng.random(batch) < 0.9
@@ -59,3 +83,47 @@ class SyntheticDataset:
                             for _ in range(shape.global_batch)])
             batch["vision_pos"] = np.sort(pos, axis=-1).astype(np.int32)
         return batch
+
+
+class Prefetcher:
+    """One-batch-ahead prefetch on a background thread.
+
+    Batch synthesis is pure host work (``batch = f(arch, step)``), so it can
+    overlap the device step: after serving step ``s`` the next batch is
+    already cooking for ``s + 1``. Random access stays correct — a request
+    for a step with no matching prefetch in flight is synthesized
+    synchronously (rollback replays jump backwards; determinism is the
+    dataset's, the prefetcher only changes *when* work happens, never what).
+
+    Use as a drop-in ``get_batch``::
+
+        with Prefetcher(ds) as pf:
+            run_with_recovery(..., get_batch=pf.batch, ...)
+    """
+
+    def __init__(self, dataset, lookahead: int = 1):
+        self.dataset = dataset
+        self.lookahead = max(0, int(lookahead))
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="data-prefetch")
+        self._pending: Dict[int, concurrent.futures.Future] = {}
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        fut = self._pending.pop(step, None)
+        out = fut.result() if fut is not None else self.dataset.batch(step)
+        for s in range(step + 1, step + 1 + self.lookahead):
+            if s not in self._pending:
+                self._pending[s] = self._pool.submit(self.dataset.batch, s)
+        return out
+
+    def close(self) -> None:
+        for fut in self._pending.values():
+            fut.cancel()
+        self._pending.clear()
+        self._pool.shutdown(wait=False)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

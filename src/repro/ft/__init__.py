@@ -14,7 +14,11 @@
   fault points (the registry is ``inject.FAULT_POINTS``; see that module's
   docstring for how to add a point);
 - :mod:`repro.ft.integrity` — device-side SDC checksums cross-checked
-  across replicas (``plan.integrity = "audit"``).
+  across replicas (``plan.integrity = "audit"``);
+- :mod:`repro.ft.straggler` — fail-slow defense: per-rank/per-component
+  straggler attribution from host-side timing telemetry, and Malleus-style
+  uneven pipeline rebalancing (:func:`choose_pp_layout` →
+  ``ParallelPlan.pp_layout``) as the mitigation.
 """
 
 from repro.core.config import RecoveryPolicy
@@ -24,8 +28,11 @@ from .preempt import (PreemptionGuard, clear_marker, read_marker,
                       write_marker)
 from .recovery import (RecoveryExhausted, RemeshSpec, RunReport,
                        run_with_recovery)
+from .straggler import (Straggler, StragglerDetector, StragglerTimer,
+                        choose_pp_layout, effective_layout)
 
 __all__ = ["Anomaly", "FlightRecorder", "Monitor", "PreemptionGuard",
            "RecoveryExhausted", "RecoveryPolicy", "RemeshSpec", "RunReport",
-           "clear_marker", "read_marker", "run_with_recovery",
-           "write_marker"]
+           "Straggler", "StragglerDetector", "StragglerTimer",
+           "choose_pp_layout", "clear_marker", "effective_layout",
+           "read_marker", "run_with_recovery", "write_marker"]

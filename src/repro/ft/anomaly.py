@@ -24,6 +24,7 @@ from typing import Deque, List, Optional
 @dataclasses.dataclass
 class Anomaly:
     kind: str          # "nan" | "spike" | "hang" | "sdc" | "ckpt_io"
+                       # | "straggler" (noted by the ft/straggler attribution)
     step: int
     detail: str
 
@@ -46,6 +47,11 @@ class Monitor:
         self.times: Deque[float] = deque(maxlen=window)
         self.anomalies: List[Anomaly] = []
         self._last_beat: Optional[float] = None
+        # the first interval after start / restore / remesh includes JIT
+        # compile (or restore replay) wall-time; letting it into the window
+        # would inflate the trailing median and mask real slowdowns until it
+        # scrolls out — it is discarded, not just exempted from the hang test
+        self._skip_next_interval = True
 
     @staticmethod
     def _median(xs) -> float:
@@ -71,16 +77,22 @@ class Monitor:
 
         if self._last_beat is not None:
             dt = now - self._last_beat
-            hung = False
-            if len(self.times) >= self.min_history:
-                med_t = self._median(self.times)
-                if dt > self.hang_factor * med_t and dt > self.hang_min_seconds:
-                    hung = True
-                    out = out or Anomaly(
-                        "hang", step, f"step_time={dt:.3f}s median={med_t:.3f}s")
-            if not hung:
-                self.times.append(dt)    # only healthy wall-times enter the
-                                         # window, mirroring the loss window
+            if self._skip_next_interval:
+                # compile/restore wall-time, not a step time: discard
+                self._skip_next_interval = False
+            else:
+                hung = False
+                if len(self.times) >= self.min_history:
+                    med_t = self._median(self.times)
+                    if dt > self.hang_factor * med_t \
+                            and dt > self.hang_min_seconds:
+                        hung = True
+                        out = out or Anomaly(
+                            "hang", step,
+                            f"step_time={dt:.3f}s median={med_t:.3f}s")
+                if not hung:
+                    self.times.append(dt)  # only healthy wall-times enter the
+                                           # window, mirroring the loss window
         self._last_beat = now
 
         if out is None and math.isfinite(loss):
@@ -107,5 +119,10 @@ class Monitor:
 
     def reset_heartbeat(self, now: Optional[float] = None) -> None:
         """Restart the hang watchdog clock (call after a checkpoint restore —
-        restore wall-time is not a step time and must not trip a hang)."""
+        restore wall-time is not a step time and must not trip a hang).
+
+        The *next* interval is discarded too: after a remesh/rebalance the
+        first step re-JITs, and after any restore the first beat straddles
+        replay bookkeeping — compile spikes must never enter ``times``."""
         self._last_beat = time.time() if now is None else now
+        self._skip_next_interval = True

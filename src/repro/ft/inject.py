@@ -24,6 +24,10 @@ fault point          where it fires
                      the per-op dispatcher outputs (:mod:`repro.kernels.dispatch`)
 ``integrity.checksum``  the device-side integrity checksum input
                      (:mod:`repro.ft.integrity`) — the SDC test bed
+``pp.stage.tick``    per-stage pipeline tick timing seam (host side, via
+                     :mod:`repro.ft.straggler` — ``slow`` faults only)
+``data.fetch``       host-side batch fetch in the recovery driver
+                     (``slow`` faults, via the straggler timer)
 ===================  ========================================================
 
 **Adding a new fault point** is two lines: call :func:`register_fault_point`
@@ -42,7 +46,13 @@ Fault classes (``FaultSpec.kind``): ``bitflip`` (xor one high-exponent bit
 of one element), ``nan`` (poison one element), ``spike`` (scale the whole
 payload), ``hang`` (host sleep), ``drop_write`` (shard file vanishes),
 ``truncate_write`` (shard file cut short), ``persist_exc`` (persist thread
-raises).
+raises), ``slow`` (fail-slow, survey §8.1: a *recurring* host-side delay of
+``sleep_s`` per unit of work at one named point, active for ``span``
+consecutive steps starting at ``step`` and maskable to one ``rank`` — unlike
+``hang``'s one-shot stall, ``slow`` models a degraded device/link/host that
+stays degraded; the :mod:`repro.ft.straggler` timer executes the delay
+inside the matching timing section via :func:`slow_spec_for`, so the
+degradation is real measured wall time, replayable bit-for-bit by step).
 """
 
 from __future__ import annotations
@@ -55,7 +65,7 @@ from contextlib import contextmanager
 from typing import Any, Dict, List, Optional, Tuple
 
 FAULT_KINDS = ("bitflip", "nan", "spike", "hang",
-               "drop_write", "truncate_write", "persist_exc")
+               "drop_write", "truncate_write", "persist_exc", "slow")
 
 # name -> one-line doc. The registry is the contract between injection sites
 # and tests: taint()/io_fault() refuse unknown names, so a typo'd fault point
@@ -79,6 +89,8 @@ for _n, _d in (
     ("kernel.expert_gemm", "expert-GEMM dispatcher output"),
     ("kernel.ssd", "SSD-scan dispatcher output"),
     ("integrity.checksum", "device-side integrity checksum input"),
+    ("pp.stage.tick", "per-stage pipeline tick (straggler timer, host)"),
+    ("data.fetch", "recovery-driver batch fetch (straggler timer, host)"),
 ):
     register_fault_point(_n, _d)
 
@@ -98,17 +110,22 @@ class FaultSpec:
     ``rank``/``axis`` restrict device-side corruption to one mesh rank —
     the only way to create *replica-divergent* state (true SDC) under SPMD,
     where an unmasked corruption computes identically on every replica.
+    For ``slow`` faults, ``rank`` instead pins the delay to one rank of the
+    timed section (pipeline stage / ring position) and ``span`` keeps the
+    fault active for that many consecutive steps — fail-slow is a condition,
+    not an event.
     """
     point: str
     kind: str
     step: int = 0
     seed: int = 0
     scale: float = 1e4        # "spike" multiplier
-    sleep_s: float = 1.0      # "hang" duration
+    sleep_s: float = 1.0      # "hang" duration / "slow" per-work-unit delay
     tick: Optional[int] = 0   # which trace occurrence fires (None = all)
     times: int = 1            # host-side max firings
     rank: Optional[int] = None
     axis: Optional[str] = None
+    span: int = 1             # "slow": active for steps [step, step + span)
 
     def __post_init__(self):
         if self.point not in FAULT_POINTS:
@@ -118,6 +135,8 @@ class FaultSpec:
         if self.kind not in FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.span < 1:
+            raise ValueError(f"span must be >= 1, got {self.span}")
 
     def key(self) -> int:
         """The deterministic corruption key (crc32, never salted hash())."""
@@ -151,6 +170,9 @@ class FaultController:
             n = self._trace_counts.get(point, 0)
             self._trace_counts[point] = n + 1
             for sp in self._specs:
+                if sp.kind == "slow":
+                    continue    # host-side delay (slow_spec_for), never a
+                                # trace-time payload corruption
                 if sp.point == point and (sp.tick is None or sp.tick == n):
                     self.fired.append((point, sp.kind, sp.step))
                     return sp
@@ -163,6 +185,8 @@ class FaultController:
             for sp in self._specs:
                 if sp.point != point or sp.step != step:
                     continue
+                if sp.kind == "slow":
+                    continue    # executed by the straggler timer's section
                 k = (point, sp.kind, sp.step)
                 if self._io_counts.get(k, 0) >= sp.times:
                     continue
@@ -271,6 +295,35 @@ def io_spec_for(point: str, step: int, kinds) -> Optional[FaultSpec]:
                 CONTROLLER._io_counts[k] = CONTROLLER._io_counts.get(k, 0) + 1
                 CONTROLLER.fired.append(k)
                 return sp
+    return None
+
+
+def slow_spec_for(point: str, step: int,
+                  rank: Optional[int] = None) -> Optional[FaultSpec]:
+    """The armed ``slow`` spec covering ``(point, step, rank)``, or None.
+
+    A ``slow`` fault is *windowed*: it matches every step in
+    ``[spec.step, spec.step + spec.span)`` (a degraded component stays
+    degraded), and when the spec pins a ``rank`` only that rank of the timed
+    section sees the delay. Deterministic by construction — whether the delay
+    fires is a pure function of (spec, step, rank), so a rollback replay
+    through the fault window degrades identically. The caller (the
+    :mod:`repro.ft.straggler` timer) executes ``sleep_s`` per unit of work
+    inside the matching section; each match is marked in
+    ``CONTROLLER.fired``.
+    """
+    if point not in FAULT_POINTS:
+        raise ValueError(f"unknown fault point {point!r}")
+    with CONTROLLER._lock:
+        for sp in CONTROLLER._specs:
+            if sp.kind != "slow" or sp.point != point:
+                continue
+            if not sp.step <= step < sp.step + sp.span:
+                continue
+            if sp.rank is not None and sp.rank != rank:
+                continue
+            CONTROLLER.fired.append((point, "slow", step))
+            return sp
     return None
 
 

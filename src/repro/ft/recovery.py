@@ -25,6 +25,19 @@ Each anomaly kind from :class:`repro.ft.anomaly.Monitor` maps through a
   the latest checkpoint onto it — params and ZeRO-1 optimizer moments are
   reassembled from the old mesh's shard slices and re-scattered over the
   new data axis — then continues on the shrunken cluster.
+- **rebalance** — the fail-slow mitigation (survey §8.1, Malleus-style):
+  a confirmed ``straggler`` attribution on a pipeline stage triggers the
+  ``rebalance(new_layout)`` hook, which rebuilds the pipelined step under an
+  uneven ``ParallelPlan.pp_layout`` chosen by
+  :func:`repro.ft.straggler.choose_pp_layout` from the *measured* per-stage
+  times — the degraded stage sheds layers instead of the whole run slowing
+  to its pace. The driver restores the latest checkpoint through the same
+  reshard path a remesh uses (``pp_layout`` is a layout axis in the
+  manifest), so the relayout rides the elastic machinery rather than a
+  bespoke transfer. A rank that was already rebalanced and is *still*
+  attributed (its per-layer cost is unchanged — that is expected, not a
+  failure) escalates to ``remesh`` when a hook is wired, else logs and
+  continues.
 - **ignore** — log and continue (the hang watchdog's default, so slow-step
   jitter never rolls back a healthy run unless asked to).
 
@@ -40,6 +53,13 @@ Two anomaly kinds originate outside the Monitor's statistical detectors
   retry/backoff loop. The run itself is healthy, so ``policy.ckpt_io``
   defaults to ignore (training continues on the older checkpoint cadence);
   ``"rollback"`` forces an immediate restore instead.
+- **straggler** — a confirmed fail-slow attribution from the attached
+  :class:`repro.ft.straggler.StragglerTimer`: the driver times the batch
+  fetch, the jitted step, and checkpoint persists, feeds the timer every
+  step, and notes the top confirmed ``(rank, section, class)`` event when
+  the statistical detectors stayed quiet. Routed through
+  ``policy.straggler`` (default ignore — attribution is always logged; the
+  ladder is ignore → rebalance → remesh).
 
 Fault injection for tests rides two hooks: ``fault_injector(step, state)``
 (state-level corruption, see :func:`repro.ft.inject.make_injector`) and
@@ -72,13 +92,16 @@ black box.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import time
+from contextlib import nullcontext
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.checkpoint.store import CheckpointManager, CorruptCheckpointError
 from repro.core.config import RecoveryPolicy
 from . import inject as _inject
 from .anomaly import Anomaly, Monitor
 from .preempt import choose_tier, clear_marker, read_marker, write_marker
+from .straggler import choose_pp_layout, effective_layout
 
 
 class RecoveryExhausted(RuntimeError):
@@ -119,6 +142,9 @@ class RunReport:
     restores: int
     losses: List[float]
     remeshes: int = 0
+    # pp_layout relayouts applied by the straggler ladder (each is also a
+    # restore — the reshard rides the checkpoint machinery)
+    rebalances: int = 0
     # (step, anomaly kind, action taken) — the policy audit trail
     actions: List[Tuple[int, str, str]] = dataclasses.field(default_factory=list)
     # corrupt checkpoints skipped by fallback restores
@@ -149,6 +175,8 @@ def run_with_recovery(
     policy: Optional[RecoveryPolicy] = None,
     rescue_step: Optional[Callable[[Any, Dict], Tuple[Any, Dict]]] = None,
     remesh: Optional[Callable[[], RemeshSpec]] = None,
+    straggler=None,
+    rebalance: Optional[Callable[[Tuple[int, ...]], RemeshSpec]] = None,
     resume: bool = False,
     fault_step_fn: Optional[Callable[[int], Optional[Callable]]] = None,
     mem_ckpt=None,
@@ -168,7 +196,21 @@ def run_with_recovery(
     refusing. Restores skip corrupt checkpoints (newest-intact fallback).
     ``remesh()`` is the elastic hook: called on a hang when
     ``policy.hang == "remesh"``, it returns the shrunken-cluster
-    :class:`RemeshSpec` the run continues under. ``resume=True`` picks up
+    :class:`RemeshSpec` the run continues under.
+
+    ``straggler`` (a :class:`repro.ft.straggler.StragglerTimer`) turns on
+    fail-slow attribution: the driver times the batch fetch
+    (``data.fetch``), each checkpoint persist (``ckpt.persist``), and the
+    jitted step, and calls ``straggler.after_step`` every step — which also
+    executes any armed ``slow`` fault's real delay, so injected fail-slow
+    costs wall clock. A confirmed attribution is noted as a ``straggler``
+    anomaly and routed through ``policy.straggler``. ``rebalance(layout)``
+    is the mitigation hook: given the :func:`choose_pp_layout` target it
+    returns a :class:`RemeshSpec` for the same mesh with
+    ``plan.pp_layout = layout``; the driver reshard-restores onto it
+    exactly like a remesh. Without the hook (or for non-stage attributions)
+    ``"rebalance"`` degrades to ``"remesh"`` when that hook exists, else to
+    ``"ignore"``. ``resume=True`` picks up
     from the latest checkpoint already in ``ckpt`` (resharding onto
     ``state``'s layout if it was written on a different one) instead of
     saving a fresh step-0 checkpoint; a ``PREEMPTED`` marker left by a
@@ -213,12 +255,19 @@ def run_with_recovery(
             ckpt.flight = flight
         if mem_ckpt is not None and getattr(mem_ckpt, "flight", None) is None:
             mem_ckpt.flight = flight
+    if straggler is not None and flight is not None \
+            and getattr(straggler.detector, "flight", None) is None:
+        straggler.detector.flight = flight
     losses: List[float] = []
     actions: List[Tuple[int, str, str]] = []
     restores = 0
     remeshes = 0
+    rebalances = 0
     fallbacks = 0
     mem_restores = 0
+    # stages already relayouted by the straggler ladder: a re-attribution of
+    # the same rank (its per-layer cost is unchanged) escalates, not loops
+    rebalanced_ranks: Set[int] = set()
     spike_counts: Dict[int, int] = {}
     rescue_mode: Dict[int, str] = {}   # step -> "rescue" | "skip", sticky
     step = 0
@@ -275,13 +324,20 @@ def run_with_recovery(
             return got, tree
         raise last_err                 # every checkpoint on disk is corrupt
 
+    def _sect(name, s):
+        """The straggler timer's section context (times + executes armed
+        ``slow`` delays), or a no-op when no timer is attached."""
+        return (straggler.section(name, s) if straggler is not None
+                else nullcontext())
+
     def _try_save(s, st, blocking=False) -> Optional[Anomaly]:
         """Save, converting an (already retried) persist failure into a
         ``ckpt_io`` anomaly routed through ``policy.ckpt_io``. With async
         persist the failure of save N surfaces at save N+1's fence — the
         anomaly is stamped with the step the failure *surfaced* at."""
         try:
-            ckpt.save(s, st, blocking=blocking, plan=plan, mesh=mesh)
+            with _sect("ckpt.persist", s):
+                ckpt.save(s, st, blocking=blocking, plan=plan, mesh=mesh)
             return None
         except (OSError, RuntimeError) as e:
             a = monitor.note("ckpt_io", s, repr(e))
@@ -295,8 +351,8 @@ def run_with_recovery(
     def _report(**over) -> RunReport:
         base = dict(steps_done=step, anomalies=monitor.anomalies,
                     restores=restores, losses=losses, remeshes=remeshes,
-                    actions=actions, ckpt_fallbacks=fallbacks,
-                    mem_restores=mem_restores)
+                    rebalances=rebalances, actions=actions,
+                    ckpt_fallbacks=fallbacks, mem_restores=mem_restores)
         base.update(over)
         return RunReport(**base)
 
@@ -361,9 +417,13 @@ def run_with_recovery(
                 faulty = fault_step_fn(step)
                 if faulty is not None:
                     fn = faulty
-            new_state, metrics = fn(cur, get_batch(step))
-            loss = float(metrics["loss"])
-            gnorm = float(metrics.get("grad_norm", 0.0))
+            with _sect("data.fetch", step):
+                batch = get_batch(step)
+            t0 = time.perf_counter()
+            new_state, metrics = fn(cur, batch)
+            loss = float(metrics["loss"])    # blocks on the device, so the
+            gnorm = float(metrics.get("grad_norm", 0.0))  # timing below is
+            step_seconds = time.perf_counter() - t0       # real step time
             div = float(metrics.get("integrity_div", 0.0))
             if flight is not None:
                 for point, kind, fstep in \
@@ -380,6 +440,20 @@ def run_with_recovery(
                     and anomaly.kind == "spike":
                 anomaly = None             # the rescue step owns this spike
 
+            # per-step straggler telemetry: ALWAYS fed (armed `slow` faults
+            # execute their real delays inside after_step — skipping it would
+            # un-inject the fault), but only *noted* as the step's anomaly
+            # when the statistical detectors stayed quiet (a nan/spike/hang
+            # outranks an attribution of the same symptom)
+            ev = None
+            if straggler is not None:
+                ev = straggler.after_step(step, step_seconds, plan=plan)
+            if ev is not None and anomaly is None:
+                anomaly = monitor.note(
+                    "straggler", step,
+                    f"rank={ev.rank} section={ev.section} class={ev.cls} "
+                    f"slowdown={ev.slowdown:.2f}x")
+
             if anomaly is not None:
                 if anomaly.kind == "spike":
                     spike_counts[step] = spike_counts.get(step, 0) + 1
@@ -387,9 +461,28 @@ def run_with_recovery(
                               else policy.repeated_spike)
                 else:
                     action = getattr(policy, anomaly.kind)
-                if action == "remesh" and (anomaly.kind != "hang"
+                new_layout = None
+                if action == "rebalance":
+                    # applicable only to a pipeline-stage attribution with a
+                    # hook, a known layout, and a rank not already relayouted
+                    # (its per-layer cost won't change — escalate instead)
+                    lay = effective_layout(
+                        plan, getattr(straggler, "cfg", None))
+                    ok = (rebalance is not None and ev is not None
+                          and ev.section == "pp.stage" and lay is not None
+                          and ev.rank is not None
+                          and ev.rank not in rebalanced_ranks)
+                    if ok:
+                        new_layout = choose_pp_layout(
+                            straggler.stage_times(), lay)
+                        if new_layout == tuple(lay):
+                            action = "ignore"   # measurement says: balanced
+                    else:
+                        action = "remesh" if remesh is not None else "ignore"
+                if action == "remesh" and (anomaly.kind not in
+                                           ("hang", "straggler")
                                            or remesh is None):
-                    action = "ignore"      # no hook / not a hang: advisory
+                    action = "ignore"      # no hook / not escalable: advisory
                 actions.append((step, anomaly.kind, action))
                 if flight is not None:
                     flight.record("policy", step, anomaly=anomaly.kind,
@@ -423,6 +516,40 @@ def run_with_recovery(
                         rescue_step = spec.rescue_step
                     restores += 1
                     remeshes += 1
+                    if straggler is not None:
+                        straggler.plan = plan
+                        straggler.reset()  # old-mesh baselines are stale
+                    del losses[step:]
+                    continue
+                if action == "rebalance":
+                    if restores >= policy.max_restores:
+                        raise RecoveryExhausted(restores, anomaly)
+                    spec = rebalance(new_layout)
+                    if mem_ckpt is not None:
+                        # RAM snapshots record the old pp_layout; the hot
+                        # tier cannot reshard, so don't keep failing on them
+                        mem_ckpt.clear()
+                    # the saved manifests record the old pp_layout, so
+                    # check_plan routes this restore "reshard" — the
+                    # relayout IS an elastic reshard, not a refusal
+                    step, state = _restore(spec.state_template,
+                                           spec.shardings,
+                                           spec.plan, spec.mesh)
+                    train_step = spec.train_step
+                    if spec.plan is not None:
+                        plan = spec.plan
+                    if spec.mesh is not None:
+                        mesh = spec.mesh
+                    if spec.rescue_step is not None:
+                        rescue_step = spec.rescue_step
+                    restores += 1
+                    rebalances += 1
+                    rebalanced_ranks.add(ev.rank)
+                    straggler.plan = plan
+                    straggler.reset()      # new regime: re-learn baselines
+                    if flight is not None:
+                        flight.record("rebalance", step, rank=ev.rank,
+                                      layout=list(new_layout))
                     del losses[step:]
                     continue
                 # "ignore": fall through and accept the step

@@ -36,8 +36,9 @@ import jax.numpy as jnp
 from repro.core import ARCH_IDS, InputShape, ParallelPlan, RecoveryPolicy
 from repro.core.config import RECOVERY_ACTIONS, Family
 from repro.checkpoint import CheckpointManager, MemoryCheckpointTier
-from repro.data import SyntheticDataset
-from repro.ft import FlightRecorder, Monitor, run_with_recovery
+from repro.data import Prefetcher, SyntheticDataset
+from repro.ft import (FlightRecorder, Monitor, StragglerTimer,
+                      run_with_recovery)
 from repro.ft.preempt import PreemptionGuard
 from repro.launch.mesh import batch_axes_for, make_local_mesh
 from repro.launch.stepbuilder import resolve_config
@@ -84,6 +85,25 @@ def main() -> None:
     ap.add_argument("--on-hang", default="ignore", choices=RECOVERY_ACTIONS,
                     help="action for a hung/straggling step (wall-time >> "
                          "trailing median); 'ignore' logs only")
+    ap.add_argument("--on-straggler", default="ignore",
+                    choices=RECOVERY_ACTIONS,
+                    help="action for a confirmed fail-slow attribution "
+                         "(survey §8.1): 'ignore' logs the (rank, component, "
+                         "class) triple; 'rebalance' re-partitions "
+                         "layers-per-stage (Malleus-style pp_layout) when a "
+                         "pipeline stage is the straggler")
+    ap.add_argument("--straggler-factor", type=float, default=2.0,
+                    help="relative slowdown (work-normalized, vs peer median "
+                         "or trailing window) that counts as slow")
+    ap.add_argument("--straggler-window", type=int, default=16,
+                    help="sliding-window length of the straggler detector")
+    ap.add_argument("--straggler-confirm", type=int, default=3,
+                    help="consecutive slow observations before an attribution "
+                         "is emitted (detection latency in steps)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="synthesize the next batch on a background thread "
+                         "while the device step runs (pure host work; batch "
+                         "contents are unchanged)")
     ap.add_argument("--rescue-lr-scale", type=float, default=0.1,
                     help="LR multiplier used by the lr_rescue policy while "
                          "replaying the offending step")
@@ -153,11 +173,15 @@ def main() -> None:
     policy = RecoveryPolicy(
         nan=args.on_nan, spike=args.on_spike,
         repeated_spike=args.on_repeated_spike, hang=args.on_hang,
-        sdc=args.on_sdc, max_restores=args.max_restores,
+        sdc=args.on_sdc, straggler=args.on_straggler,
+        max_restores=args.max_restores,
         rescue_lr_scale=args.rescue_lr_scale,
         ckpt_memory_keep=args.ckpt_memory_keep,
         peer_redundancy=args.peer_redundancy,
-        preempt_grace=args.preempt_grace, flight_len=args.flight_len)
+        preempt_grace=args.preempt_grace, flight_len=args.flight_len,
+        straggler_factor=args.straggler_factor,
+        straggler_window=args.straggler_window,
+        straggler_confirm=args.straggler_confirm)
     mem_ckpt = None
     if policy.ckpt_memory_keep > 0:
         mem_ckpt = MemoryCheckpointTier(
@@ -171,23 +195,40 @@ def main() -> None:
         rescue_fn = jax.jit(make_train_step(model, plan, rescue_hyper,
                                             mesh=mesh))
 
+    straggler = StragglerTimer(cfg=cfg, plan=plan, policy=policy,
+                               flight=flight)
+
     t_start = time.time()
+    prefetch = Prefetcher(ds) if args.prefetch else None
+    source = prefetch.batch if prefetch is not None else ds.batch
 
     def get_batch(step: int):
-        return {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        return {k: jnp.asarray(v) for k, v in source(step).items()}
 
     def injector(step, st):
         if step == args.simulate_hang_at:
             time.sleep(2.0)
         return st
 
-    with PreemptionGuard(grace=policy.preempt_grace) as guard:
-        state, report = run_with_recovery(
-            state, step_fn, get_batch, args.steps, ckpt, monitor,
-            ckpt_every=args.ckpt_every, plan=plan, mesh=mesh, policy=policy,
-            rescue_step=rescue_fn, resume=args.resume,
-            fault_injector=injector if args.simulate_hang_at >= 0 else None,
-            mem_ckpt=mem_ckpt, preempt=guard, flight=flight)
+    try:
+        with PreemptionGuard(grace=policy.preempt_grace) as guard:
+            state, report = run_with_recovery(
+                state, step_fn, get_batch, args.steps, ckpt, monitor,
+                ckpt_every=args.ckpt_every, plan=plan, mesh=mesh,
+                policy=policy, rescue_step=rescue_fn, resume=args.resume,
+                fault_injector=(injector if args.simulate_hang_at >= 0
+                                else None),
+                mem_ckpt=mem_ckpt, preempt=guard, flight=flight,
+                straggler=straggler)
+    except KeyboardInterrupt as e:
+        # Ctrl-C is an exit, not a crash — but it still leaves a black box:
+        # the driver dumped the ring on the way out (any BaseException does)
+        fp = getattr(e, "flight_path", None) or flight.dump("KeyboardInterrupt")
+        print(f"[train] interrupted; flight log at {fp}")
+        raise SystemExit(130)
+    finally:
+        if prefetch is not None:
+            prefetch.close()
 
     dt = time.time() - t_start
     if report.preempted:
@@ -201,7 +242,7 @@ def main() -> None:
           f"({tokens/dt:.0f} tok/s), loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f}, anomalies={len(report.anomalies)}, "
           f"restores={report.restores} (memory-tier {report.mem_restores}), "
-          f"remeshes={report.remeshes}")
+          f"remeshes={report.remeshes}, rebalances={report.rebalances}")
     for step, kind, action in report.actions:
         print(f"[train]   step {step}: {kind} -> {action}")
     print(f"[train] ckpt snapshot {ckpt.snapshot_seconds*1e3:.1f}ms "

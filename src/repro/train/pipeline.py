@@ -59,6 +59,22 @@ over its own chunk, completed by a cp ``pmean`` (forward) and a 1/cp seed
 split plus all-leaf cp ``psum`` (1F1B backward — params are cp-replicated
 but each rank's backward saw only its chunk).
 
+Uneven stages (survey §8.1, Malleus-style fail-slow mitigation): with
+``plan.pp_layout = (l_0, ..., l_{P-1})`` (summing to ``n_layers``) stage
+``i`` holds ``l_i`` layers instead of the even split — the rebalancing
+answer to a degraded stage, which is slow *per unit of work* and so should
+hold fewer layers. Canonical params keep the (n_layers, ...) stacked layout
+(so checkpoints are layout-independent and a ``pp_layout`` change restores
+as a plain reshard); the loss fn gathers them into padded
+``(pp * max(layout), ...)`` stacks — padding slots replicate each stage's
+first layer and still shard evenly ``P("pod")`` — and an ``active`` mask
+kills padded slots: via ``lax.cond`` (true compute skip) on the plain path,
+or masked uniform execution when TP/CP rings run inside the tick (the
+collectives must execute on every pod regardless). Padded-slot gradients
+are zero, and the backward scatter-adds packed grads onto the canonical
+stacks, so uneven layouts are loss- and grad-equivalent to the even split
+and to the single-device model.
+
 Supported for decoder-only families (dense / vlm backbones); the hybrid/
 enc-dec archs pipeline equally in principle but are out of scope for this
 feature (EXPERIMENTS.md notes which configs exercise it).
@@ -92,18 +108,47 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     """Returns loss_fn(params, batch) with layers pipelined over ``pod``.
 
     Requires: mesh has a ``pod`` axis, plan.pp == mesh.shape["pod"],
-    plan.microbatches >= plan.pp, cfg.n_layers % pp == 0. ``z_loss`` is
-    threaded into the per-microbatch cross-entropy so pipelined and
-    single-stage losses agree bit-for-bit.
+    plan.microbatches >= plan.pp, and either cfg.n_layers % pp == 0 or an
+    explicit ``plan.pp_layout`` (uneven layers-per-stage, summing to
+    n_layers with every stage >= 1). ``z_loss`` is threaded into the
+    per-microbatch cross-entropy so pipelined and single-stage losses agree
+    bit-for-bit.
     """
     pp = mesh.shape["pod"]
-    assert plan.pp == pp and cfg.n_layers % pp == 0
+    assert plan.pp == pp
+    layout = plan.pp_layout
+    if layout is None:
+        assert cfg.n_layers % pp == 0, \
+            f"n_layers={cfg.n_layers} must divide pp={pp} (or set pp_layout)"
+        layout = (cfg.n_layers // pp,) * pp
+    else:
+        layout = tuple(int(x) for x in layout)
+        assert len(layout) == pp and min(layout) >= 1 \
+            and sum(layout) == cfg.n_layers, (layout, cfg.n_layers, pp)
     n_micro = plan.microbatches
     assert n_micro >= pp, "need microbatches >= stages for pipelining"
     schedule = plan.pp_schedule
-    layers_per_stage = cfg.n_layers // pp
+    max_l = max(layout)
+    uneven = len(set(layout)) > 1
+    # Uneven (Malleus) layouts pack each stage's layers into max_l slots so
+    # the stack still shards evenly P("pod") on dim 0 (NamedSharding cannot
+    # shard unevenly): pack_idx gathers the canonical (n_layers, ...) stacks
+    # into (pp * max_l, ...) — padding slots replicate the stage's first
+    # layer (any valid index: their outputs and gradients are masked to zero
+    # by `active`, and the backward scatter-add returns grads to the
+    # canonical stacks, so checkpoints stay layout-independent).
+    offsets = np.concatenate([[0], np.cumsum(layout)[:-1]]).astype(np.int64)
+    pack_idx = np.concatenate([
+        np.concatenate([np.arange(off, off + n_l),
+                        np.full(max_l - n_l, off, np.int64)])
+        for off, n_l in zip(offsets, layout)])
+    active_np = np.zeros((pp, max_l), bool)
+    for _s, _n in enumerate(layout):
+        active_np[_s, :_n] = True
     dtype = jnp.dtype(plan.compute_dtype)
-    windows_all = jnp.asarray(_layer_windows(cfg))
+    windows_np = np.asarray(_layer_windows(cfg))
+    windows_host = (windows_np[pack_idx] if uneven
+                    else windows_np).reshape(pp, max_l)
     baxes = batch_axes if batch_axes else None
     n_dp = 1
     for a in (batch_axes or ()):
@@ -181,7 +226,14 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             return P("pod") if "layers" in names else P()
         return jax.tree_util.tree_map_with_path(one, params)
 
-    def _tick_factory(toks_mb, labs_mb, windows_l, positions):
+    # uneven layouts: how padded layer slots are skipped. With TP/CP rings
+    # inside the tick the collectives must execute uniformly on every pod,
+    # so padded slots run masked (outputs/aux zeroed via where) — the dead
+    # compute is bounded by (max_l - l_i) layers; without rings a lax.cond
+    # skips the padded layer body outright.
+    ring_collectives = tp_overlap or cp > 1
+
+    def _tick_factory(toks_mb, labs_mb, windows_l, active_l, positions):
         """Build tick(params_local, buf, t) -> (x_out, loss_c, aux_c) — one
         pipeline tick of one stage. ``loss_c``/``aux_c`` are (1,)-shaped
         (scalar scan carries break grad-of-shard_map on jax 0.4.x)."""
@@ -202,14 +254,35 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
 
             def body(carry, xs):
                 xc, aux = carry
-                lp, w = xs
-                xn, a = layer_fwd(xc, lp, w, positions)
+                lp, w, act = xs
+                if not uneven:
+                    # even split: every slot is real; `act` is untouched and
+                    # DCE'd, keeping this path identical to the classic one
+                    xn, a = layer_fwd(xc, lp, w, positions)
+                    return (xn, aux + a), None
+                if ring_collectives:
+                    # masked uniform execution: the TP/CP collectives inside
+                    # layer_fwd must run on every pod every slot — compute
+                    # the padded slot too, then discard its contribution
+                    xn, a = layer_fwd(xc, lp, w, positions)
+                    xn = jnp.where(act, xn, xc)
+                    return (xn, aux + jnp.where(act, a, 0.0)), None
+
+                def run(op):
+                    xc_, lp_, w_ = op
+                    xn_, a_ = layer_fwd(xc_, lp_, w_, positions)
+                    return xn_, jnp.reshape(a_, (-1,))[:1]
+
+                def skip(op):
+                    return op[0], jnp.zeros((1,), jnp.float32)
+
+                xn, a = jax.lax.cond(act, run, skip, (xc, lp, w))
                 return (xn, aux + a), None
 
             (x, aux), _ = jax.lax.scan(
                 _remat(body, plan.remat),
                 (x, jnp.zeros((1,), jnp.float32)),
-                (params_local["layers"], windows_l[0]))
+                (params_local["layers"], windows_l[0], active_l[0]))
 
             # LM head + loss only on the last stage, and only once the
             # microbatch that entered at t - (P-1) has drained — lax.cond
@@ -257,11 +330,11 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         return (tokens_l.reshape(n_micro, mb, s),
                 labels_l.reshape(n_micro, mb, s), mb, s)
 
-    def _staged_fwd(params_local, tokens_l, labels_l, windows_l):
+    def _staged_fwd(params_local, tokens_l, labels_l, windows_l, active_l):
         """Fill-drain forward pipeline (shared by both schedules). Returns the
         replicated (2,) vector [xent, moe_aux]."""
         toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
-        tick = _tick_factory(toks_mb, labs_mb, windows_l,
+        tick = _tick_factory(toks_mb, labs_mb, windows_l, active_l,
                              exlib.cp_local_positions(ctx, s))
 
         def fwd_tick(carry, t):
@@ -288,7 +361,7 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             aux = jax.lax.pmean(aux, "cp")
         return jnp.stack([loss, aux])
 
-    def _staged_bwd(params_local, tokens_l, labels_l, windows_l, g):
+    def _staged_bwd(params_local, tokens_l, labels_l, windows_l, active_l, g):
         """1F1B backward: one scan whose tick t (a) advances the forward
         recompute pipeline by one stage-tick and (b) retires the backward
         stage-tick for the microbatch this stage owes at t. Saved stage inputs
@@ -296,7 +369,7 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         are O(P), never O(M)."""
         stage = jax.lax.axis_index("pod")
         toks_mb, labs_mb, mb, s = _microbatches(tokens_l, labels_l)
-        tick = _tick_factory(toks_mb, labs_mb, windows_l,
+        tick = _tick_factory(toks_mb, labs_mb, windows_l, active_l,
                              exlib.cp_local_positions(ctx, s))
 
         ring = 2 * pp - 1
@@ -378,15 +451,42 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         return jax.tree_util.tree_map_with_path(finish, gacc)
 
     seq_ax = "cp" if cp > 1 else None
+    windows_dev = jnp.asarray(windows_host)
+    active_dev = jnp.asarray(active_np)
+    pack_arr = jnp.asarray(pack_idx) if uneven else None
+
+    def _pack_params(params):
+        """Gather the canonical (n_layers, ...) layer stacks into the padded
+        (pp*max_l, ...) pipeline stacks (identity for even layouts, so the
+        classic path's trace is untouched)."""
+        if not uneven:
+            return params
+        packed = dict(params)
+        packed["layers"] = jax.tree.map(
+            lambda x: jnp.take(x, pack_arr, axis=0), params["layers"])
+        return packed
+
+    def _unpack_grads(grads, params):
+        """Scatter-add padded-stack grads back onto the canonical stacks.
+        Padded slots carry exact zeros (their outputs are masked / cond-
+        skipped), so the add is a pure inverse of the pack gather."""
+        if not uneven:
+            return grads
+        out = dict(grads)
+        out["layers"] = jax.tree.map(
+            lambda gp, p: jnp.zeros(p.shape, gp.dtype).at[pack_arr].add(gp),
+            grads["layers"], params["layers"])
+        return out
 
     def _run_fwd(params, tokens, labels):
-        windows = windows_all.reshape(pp, layers_per_stage)
+        pk = _pack_params(params)
         return shard_map(
             _staged_fwd, mesh=mesh,
-            in_specs=(param_specs(params),
-                      P(baxes, seq_ax), P(baxes, seq_ax), P("pod", None)),
+            in_specs=(param_specs(pk),
+                      P(baxes, seq_ax), P(baxes, seq_ax), P("pod", None),
+                      P("pod", None)),
             out_specs=P(),
-        )(params, tokens, labels, windows)
+        )(pk, tokens, labels, windows_dev, active_dev)
 
     @jax.custom_vjp
     def f1b(params, tokens, labels):
@@ -399,14 +499,15 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
 
     def f1b_bwd(res, g):
         params, tokens, labels = res
-        pspecs = param_specs(params)
-        windows = windows_all.reshape(pp, layers_per_stage)
+        pk = _pack_params(params)
+        pspecs = param_specs(pk)
         grads = shard_map(
             _staged_bwd, mesh=mesh,
             in_specs=(pspecs, P(baxes, seq_ax), P(baxes, seq_ax),
-                      P("pod", None), P()),
+                      P("pod", None), P("pod", None), P()),
             out_specs=pspecs,
-        )(params, tokens, labels, windows, g)
+        )(pk, tokens, labels, windows_dev, active_dev, g)
+        grads = _unpack_grads(grads, params)
         zt = np.zeros(tokens.shape, dtype=jax.dtypes.float0)
         zl = np.zeros(labels.shape, dtype=jax.dtypes.float0)
         return grads, zt, zl

@@ -12,6 +12,12 @@ injected at a scheduled step into a 2×2-mesh run of each model family
 (dense, MoE, Mamba2) with ``plan.integrity = "audit"`` + ZeRO-1; every
 fault is detected, recovered per the policy table, and the final state
 bit-matches the fault-free schedule.
+
+The ``slow`` rows extend the matrix with the fail-slow class (survey
+§8.1): a seeded, rank-masked delay on one context-parallel ring rank per
+family, detected and attributed to ``(rank=1, cp.ring, comm)`` by the
+straggler telemetry within its confirm window; delays cost wall clock but
+corrupt nothing, so the run still bit-matches the fault-free schedule.
 """
 
 import jax
@@ -509,6 +515,94 @@ def test_chaos_matrix_mamba2(multidevice):
     multidevice(_CHAOS_TEMPLATE.format(
         cfg=_SSM_CFG, payload_point="cp.ring.state",
         plan_extra=""), n_devices=4)
+
+
+_SLOW_TEMPLATE = """
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.core import (Family, InputShape, ModelConfig, MoEConfig, SSMConfig,
+                        ParallelPlan, RecoveryPolicy)
+from repro.data import SyntheticDataset
+from repro.ft import Monitor, StragglerDetector, StragglerTimer, \\
+    run_with_recovery
+from repro.ft.inject import FaultSpec, armed
+from repro.models import build_model
+from repro.train import Hyper, init_train_state, make_train_step
+
+cfg = {cfg}
+plan = ParallelPlan(remat="none", compute_dtype="float32", cp=2,
+                    zero_stage=1, integrity="audit"{plan_extra})
+mesh = jax.make_mesh((2, 2), ("data", "cp"))
+model = build_model(cfg, plan, mesh, ("data",))
+ds = SyntheticDataset(cfg, InputShape("t", 16, 8, "train"))
+get_batch = lambda s: {{k: jnp.asarray(v) for k, v in ds.batch(s).items()}}
+hyper = Hyper(peak_lr=1e-3, total_steps=40, z_loss=0.0)
+N = 16
+
+step_fn = jax.jit(make_train_step(model, plan, hyper, mesh=mesh))
+state0 = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
+
+detector = StragglerDetector(factor=2.0, confirm=2, min_seconds=5e-3)
+timer = StragglerTimer(cfg=cfg, plan=plan, detector=detector)
+ckpt = CheckpointManager(tempfile.mkdtemp(), keep=3, async_persist=False)
+# the injected delay lands in the next step's wall-clock interval too —
+# keep the hang watchdog out of the straggler ladder's way
+monitor = Monitor(min_history=4, hang_min_seconds=60.0)
+
+# rank 1 of the context-parallel ring degrades from step 6 onward
+with armed([FaultSpec("{slow_point}", "slow", step=6, span=999, rank=1,
+                      sleep_s=0.05)]):
+    final, report = run_with_recovery(
+        state0, step_fn, get_batch, N, ckpt, monitor, ckpt_every=5,
+        plan=plan, mesh=mesh, policy=RecoveryPolicy(),    # straggler: ignore
+        straggler=timer)
+
+assert report.steps_done == N, report
+strag = [a for a in report.anomalies if a.kind == "straggler"]
+assert strag, report.anomalies
+assert strag[0].step <= 6 + 2, strag[0]         # within the confirm window
+assert "rank=1" in strag[0].detail and "class=comm" in strag[0].detail, \\
+    strag[0].detail
+assert "cp.ring" in strag[0].detail, strag[0].detail
+assert all(k == "straggler" and act == "ignore"
+           for _, k, act in report.actions), report.actions
+assert report.restores == 0 and report.rebalances == 0, report
+
+# fail-slow delays cost wall clock but corrupt nothing: the run bit-matches
+# the fault-free schedule
+ref = init_train_state(model, jax.random.PRNGKey(0), mesh=mesh, plan=plan)
+ref_losses = []
+for s in range(N):
+    ref, m = step_fn(ref, get_batch(s))
+    ref_losses.append(float(m["loss"]))
+assert report.losses == ref_losses, (report.losses, ref_losses)
+for a, b in zip(jax.tree.leaves(final.params), jax.tree.leaves(ref.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("SLOW_OK: attributed (rank=1, cp.ring, comm), run bit-matched")
+"""
+
+
+def test_chaos_slow_dense(multidevice):
+    out = multidevice(_SLOW_TEMPLATE.format(
+        cfg=_DENSE_CFG, slow_point="cp.ring.kv",
+        plan_extra=', cp_impl="ring"'), n_devices=4)
+    assert "SLOW_OK" in out
+
+
+def test_chaos_slow_moe(multidevice):
+    out = multidevice(_SLOW_TEMPLATE.format(
+        cfg=_MOE_CFG, slow_point="cp.ring.kv",
+        plan_extra=', cp_impl="ring"'), n_devices=4)
+    assert "SLOW_OK" in out
+
+
+def test_chaos_slow_mamba2(multidevice):
+    """For Mamba2 the degraded link is the SSD entering-state ring."""
+    out = multidevice(_SLOW_TEMPLATE.format(
+        cfg=_SSM_CFG, slow_point="cp.ring.state",
+        plan_extra=""), n_devices=4)
+    assert "SLOW_OK" in out
 
 
 def test_sdc_detected_multidevice(multidevice):
