@@ -4,7 +4,9 @@
 # then smokes every fused Pallas kernel fwd+bwd under pallas_call (interpret
 # mode, one shape per op), the overlap-TP ring path vs gspmd on a 2-way model
 # mesh (quick.tp.overlap), the zigzag ring context-parallel path vs the
-# single-device oracle on a 2-way cp mesh (quick.cp.ring), and a
+# single-device oracle on a 2-way cp mesh (quick.cp.ring), the overlapped
+# expert-parallel dispatch/combine ring vs dense dispatch on a 2-way expert
+# mesh (quick.ep.overlap), and a
 # selective-remat train step, the elastic recovery path — hang on a 2x2
 # ZeRO-1 run, remesh to 1x2, reshard-restore, bit-matching losses
 # (quick.ft.elastic) — and the chaos recovery path — a dropped shard write
@@ -19,7 +21,10 @@
 # peak-memory/step-time trade-off to BENCH_trainstep.json, the
 # gspmd-vs-overlap tokens/sec + bytes-transferred sweep to BENCH_tp.json, the
 # gather-vs-ring context-parallel sweep (incl. the S=16k attention-block
-# peak-memory assertion) to BENCH_cp.json, the checkpoint sweep — blocking vs
+# peak-memory assertion) to BENCH_cp.json, the blocking-vs-overlap
+# expert-parallel sweep (exposed a2a bytes asserted fully converted to
+# compute-interleaved ppermute ticks, both impls equal to the dense loss) to
+# BENCH_ep.json, the checkpoint sweep — blocking vs
 # double-buffered snapshot stall plus cross-mesh reshard-restore latency —
 # to BENCH_ckpt.json, the fast-recovery sweep — RAM-tier restore asserted
 # >= 10x faster than the verified disk restore, peer rebuild after a lost
@@ -44,6 +49,7 @@ python -m benchmarks.run --quick | tee bench_quick.log
 python -m benchmarks.run --only trainstep --json BENCH_trainstep.json | tee bench_trainstep.log
 python -m benchmarks.run --only tp --json BENCH_tp.json | tee bench_tp.log
 python -m benchmarks.run --only cp --json BENCH_cp.json | tee bench_cp.log
+python -m benchmarks.run --only ep --json BENCH_ep.json | tee bench_ep.log
 python -m benchmarks.run --only ckpt --json BENCH_ckpt.json | tee bench_ckpt.log
 python -m benchmarks.run --only recover --json BENCH_recover.json | tee bench_recover.log
 python -m benchmarks.run --only integrity --json BENCH_integrity.json | tee bench_integrity.log

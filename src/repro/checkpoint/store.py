@@ -93,7 +93,7 @@ def _inject():
 # the ParallelPlan fields recorded in the manifest (impl/schedule knobs ride
 # along for forensics) ...
 PLAN_AXES = ("tp", "tp_impl", "cp", "cp_impl", "dp_shard", "zero_stage",
-             "ep", "pp", "pp_schedule", "pp_layout")
+             "ep", "ep_impl", "pp", "pp_schedule", "pp_layout")
 # ... and the subset check_plan actually compares: only the axes that change
 # how saved state maps onto devices. A pure schedule/impl change
 # (gpipe→1f1b, gather→ring) is replay-safe — restore reassembles full
@@ -127,8 +127,15 @@ def layout_diffs(manifest: Dict[str, Any], plan, mesh=None
     diffs: Dict[str, Tuple[Any, Any]] = {}
     if recorded is not None and plan is not None:
         want = _plan_meta(plan)
-        diffs = {k: (recorded[k], want[k]) for k in PLAN_LAYOUT_AXES
-                 if k in recorded and k in want and recorded[k] != want[k]}
+        rec = dict(recorded)
+        # manifests written before ep became an integer degree recorded the
+        # legacy bool: False means "no EP" (degree 1); True (GSPMD expert
+        # sharding) has no degree equivalent and never replays onto the new
+        # folded layouts (Python would otherwise equate True == 1)
+        if isinstance(rec.get("ep"), bool):
+            rec["ep"] = 1 if rec["ep"] is False else "legacy-gspmd-ep"
+        diffs = {k: (rec[k], want[k]) for k in PLAN_LAYOUT_AXES
+                 if k in rec and k in want and rec[k] != want[k]}
     rec_mesh = manifest.get("mesh_axes")
     if mesh is not None and rec_mesh is not None:
         want_mesh = {k: int(v) for k, v in dict(mesh.shape).items()}

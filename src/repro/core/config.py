@@ -11,6 +11,30 @@ Two layers of configuration:
 
 Everything is a frozen dataclass so configs hash and can key jit caches.
 
+Parallel-composition knobs (survey §4.1) beyond tp/cp/pp at a glance:
+
+====================================  =======================================
+knob                                  meaning
+====================================  =======================================
+``ParallelPlan.ep``                   expert-parallel degree: MoE expert dim
+                                      sharded over ``ep`` ranks, folded onto
+                                      the cp × model device ring (MoE
+                                      parallel folding) — attention keeps its
+                                      cp/tp mapping, the MoE sublayer re-reads
+                                      the same devices as one flat expert
+                                      ring, so ``ep == cp·tp`` when either is
+                                      > 1 (ep-only runs over ``model`` with
+                                      attention as a cp ring). Executor-only.
+``ParallelPlan.ep_impl``              ``auto`` | ``blocking`` | ``overlap``:
+                                      how EP dispatch/combine all-to-alls
+                                      execute. ``blocking`` = one
+                                      ``lax.all_to_all`` each side (exposed);
+                                      ``overlap`` = ppermute ring ticks
+                                      interleaved with per-peer expert-GEMM
+                                      chunks, custom-VJP reversed-ring
+                                      backward; ``auto`` = overlap
+====================================  =======================================
+
 Robustness knobs (survey §8) at a glance:
 
 ====================================  =======================================
@@ -305,7 +329,39 @@ class ParallelPlan:
                                    # repro.kernels.dispatch.select_cp_impl.
     dp_shard: int = 1              # param sharding factor F over data axis (§4.1.1)
     zero_stage: int = 1            # 0: replicated opt state, 1: shard over data axis
-    ep: bool = False               # expert parallelism (all-to-all) for MoE layers
+    ep: int = 1                    # expert-parallel degree (survey §4.1.5):
+                                   # shard the *expert* dim of MoE layers over
+                                   # ``ep`` ranks and exchange token buffers
+                                   # with dispatch/combine all-to-alls. The
+                                   # expert axis is *folded* onto the existing
+                                   # cp × model device ring (MoE parallel
+                                   # folding, Megatron-Core arXiv 2504.14960):
+                                   # attention keeps its cp/tp mapping while
+                                   # the MoE sublayer re-reads the same
+                                   # devices as one flat expert ring, so
+                                   # ``ep`` must equal cp·tp when either is
+                                   # > 1. With tp == cp == 1, ``ep`` ranks
+                                   # run on the ``model`` mesh axis and
+                                   # attention runs as a cp ring over it
+                                   # (sequence-sharded). Executor-only:
+                                   # ep > 1 always selects the block-executor
+                                   # loss (train/executor.py).
+    ep_impl: str = "auto"          # "auto" | "blocking" | "overlap": how the
+                                   # EP dispatch/combine all-to-alls execute
+                                   # (survey §4.1.5, §5.2). "blocking" is one
+                                   # lax.all_to_all before and after the
+                                   # expert GEMM — the whole token exchange
+                                   # is exposed. "overlap" decomposes each
+                                   # all-to-all into ppermute ring ticks
+                                   # interleaved with per-peer expert-GEMM
+                                   # chunks (each tick computes the chunk it
+                                   # already holds while the next is in
+                                   # flight), with a custom-VJP mirrored
+                                   # reversed-ring backward; resolved by
+                                   # repro.kernels.dispatch.select_ep_impl
+                                   # ("auto" = overlap — the ring is
+                                   # semantically identical everywhere and
+                                   # its ticks compile to async DMAs on TPU).
     pp: int = 1                    # pipeline stages over pod axis (1 = pure DP pods)
     pp_layout: Optional[Tuple[int, ...]] = None
                                    # layers-per-stage partition for uneven
@@ -423,6 +479,16 @@ class ParallelPlan:
         if self.cp_impl not in ("auto", "gather", "ring"):
             raise ValueError(
                 f"cp_impl must be auto|gather|ring, got {self.cp_impl!r}")
+        if self.ep_impl not in ("auto", "blocking", "overlap"):
+            raise ValueError(
+                f"ep_impl must be auto|blocking|overlap, got {self.ep_impl!r}")
+        if isinstance(self.ep, bool):
+            raise ValueError(
+                "ParallelPlan.ep is an integer expert-parallel degree now "
+                "(the legacy bool selected the pre-executor shard_map path, "
+                f"which is gone); got ep={self.ep!r} — use ep=<degree>")
+        if self.ep < 1:
+            raise ValueError(f"ep must be >= 1, got {self.ep}")
         if self.cp < 1:
             raise ValueError(f"cp must be >= 1, got {self.cp}")
         if self.cp > 1:
@@ -436,12 +502,6 @@ class ParallelPlan:
                     "shard_map rings; set tp_impl='overlap' (or 'auto')")
             if self.dp_over_model:
                 raise ValueError("cp > 1 is incompatible with dp_over_model")
-            if self.ep:
-                raise ValueError(
-                    "cp > 1 does not compose with expert parallelism yet: "
-                    "the executor shard_map routes experts dense/d_expert-"
-                    "sharded, so the EP all-to-all the knob selects would "
-                    "silently vanish")
         # Documented divergence (PR 4 / cp): with shard-local routing, GShard
         # token-dropping decisions are made per data/context shard while the
         # GSPMD baseline routes globally — same math only when no tokens
@@ -449,14 +509,35 @@ class ParallelPlan:
         # tests force no-drop capacity (capacity_factor >= E / top_k).
         # (validate() only sees *explicit* knobs; the executor re-checks
         # against the resolved placement, catching tp_impl="auto"→overlap.)
-        if self.cp > 1 or self.tp_impl == "overlap":
+        if self.cp > 1 or self.tp_impl == "overlap" or self.ep > 1:
             warn_shard_local_routing(cfg)
-        if self.ep and cfg.family != Family.MOE:
-            raise ValueError(f"expert parallelism requires a MoE arch, got {cfg.family}")
-        if self.ep and self.dp_over_model:
-            raise ValueError("dp_over_model consumes the model axis; EP needs it")
-        if cfg.moe and self.ep and cfg.moe.num_experts % self.tp != 0:
-            raise ValueError("num_experts must divide tp for expert parallelism")
+        if self.ep > 1:
+            if cfg.family != Family.MOE:
+                raise ValueError(
+                    f"expert parallelism requires a MoE arch, got {cfg.family}")
+            if self.dp_over_model:
+                raise ValueError(
+                    "dp_over_model consumes the model axis; EP needs it")
+            if self.tp > 1 and self.tp_impl == "gspmd":
+                raise ValueError(
+                    "ep > 1 composes with tp via the executor's explicit "
+                    "shard_map rings; set tp_impl='overlap' (or 'auto')")
+            # MoE parallel folding: the expert ring reuses the cp × model
+            # devices, so its size is pinned to their product. The ep-only
+            # placement (tp == cp == 1 → experts over the model axis) is
+            # checked against the actual mesh in executor.resolve_context.
+            fold = (self.cp if self.cp > 1 else 1) * \
+                   (self.tp if self.tp > 1 else 1)
+            if fold > 1 and self.ep != fold:
+                raise ValueError(
+                    f"ep={self.ep} must equal cp×tp={fold}: the expert axis "
+                    "folds onto the existing cp/model device ring (MoE "
+                    "parallel folding) — it is a re-mapping of those "
+                    "devices, not extra ones")
+            if cfg.moe and cfg.moe.num_experts % self.ep != 0:
+                raise ValueError(
+                    f"ep={self.ep} must divide num_experts="
+                    f"{cfg.moe.num_experts} for expert parallelism")
         if self.pp_layout is not None:
             if self.pp <= 1:
                 raise ValueError(

@@ -9,8 +9,12 @@ implement the survey's hybrid-parallelism taxonomy:
 - Data-parallel parameter sharding factor F (§4.1.1): F=1 replication,
   F=data-axis-size full sharding (ZeRO-3/FSDP); an extra ``data`` annotation is
   placed on the largest un-sharded dim.
-- Expert parallelism (§4.1.5): expert-stacked params shard the expert dim on
-  ``model`` instead of the hidden dim.
+- Expert parallelism (§4.1.5): expert-stacked params shard the expert dim
+  over the *folded* expert ring (:func:`ep_fold_axes` — the cp × model axes
+  the MoE sublayer re-reads as one flat ring of ``plan.ep`` slots, MoE
+  parallel folding) instead of the hidden dim; shared experts and the router
+  replicate over those axes because each fold rank routes its own sequence
+  shard (:func:`ep_spec_for_param` is the executor/pipeline override).
 - Vocab parallelism: embedding/LM head shard the vocab dim on ``model`` when
   divisible, else fall back to hidden-dim sharding (e.g. whisper's 51865 vocab).
 
@@ -148,8 +152,13 @@ def spec_for_param(
     if is_expert:
         # (L, E, d, de) or (L, E, de, d)
         e_dim = 1 if stacked else 0
-        if plan.ep and _divisible(shape[e_dim], mesh, "model"):
-            spec[e_dim] = "model"
+        axes = ep_fold_axes(plan)
+        n_fold = 1
+        for a in axes:
+            n_fold *= mesh.shape.get(a, 0)
+        if axes and n_fold > 0 and shape[e_dim] % n_fold == 0:
+            # expert dim over the folded expert ring (MoE parallel folding)
+            spec[e_dim] = axes if len(axes) > 1 else axes[0]
         else:
             # tensor-parallel inside each expert: shard the d_expert dim
             de_dim = len(shape) - 2 if name in _ROW_KEYS else len(shape) - 1
@@ -190,6 +199,58 @@ def param_shardings(params: Any, cfg: ModelConfig, plan: ParallelPlan, mesh: Mes
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), param_specs(params, cfg, plan, mesh)
     )
+
+
+# ---------------------------------------------------------------------------
+# Expert parallelism (folded expert ring, survey §4.1.5)
+
+
+def ep_fold_axes(plan: ParallelPlan) -> Tuple[str, ...]:
+    """The mesh axes the expert ring folds onto (MoE parallel folding).
+
+    ``plan.ep`` ranks re-read the devices of the existing cp × model ring as
+    one flat expert axis: ("cp", "model") when both are engaged, just one of
+    them when only it is, and ("model",) in the ep-only placement (tp == cp
+    == 1 — experts ride the model axis and attention runs as a cp ring over
+    it). Empty tuple when EP is off."""
+    if plan.ep <= 1:
+        return ()
+    axes = ("cp",) if plan.cp > 1 else ()
+    if plan.tp > 1 or plan.cp <= 1:
+        axes = axes + ("model",)
+    return axes
+
+
+def ep_spec_for_param(path_names: Tuple[str, ...], shape: Tuple[int, ...],
+                      plan: ParallelPlan) -> Optional[P]:
+    """EP override for one leaf entering the executor/pipeline ``shard_map``.
+
+    Returns the spec EP imposes, or ``None`` when the leaf is not
+    EP-affected (the caller falls through to its tp/overlap classification).
+    This is the single source of truth three consumers share — the executor
+    in_specs, the pipeline's per-stage param specs, and the pipeline's
+    grad-finish psum logic:
+
+    - routed experts ((L?, E, ...) with "experts" in the path): the expert
+      dim shards over :func:`ep_fold_axes`; the d_expert dim stays full, so
+      each fold rank holds complete experts and its expert-grad shard needs
+      **no** cp/model psum;
+    - shared experts and the router: replicated *full-width* over the fold
+      axes — every fold rank routes its own sequence shard, so there is no
+      width-partial psum to complete them; their grads **do** psum over the
+      fold axes.
+    """
+    axes = ep_fold_axes(plan)
+    if not axes:
+        return None
+    if "experts" in path_names:
+        e_dim = 1 if "layers" in path_names else 0
+        spec: list = [None] * len(shape)
+        spec[e_dim] = axes if len(axes) > 1 else axes[0]
+        return P(*spec)
+    if "shared" in path_names or path_names[-1] == "router":
+        return P(*([None] * len(shape)))
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -85,6 +85,7 @@ for _n, _d in (
     ("tp.ring.tick", "overlap-TP ring ppermute payload"),
     ("cp.ring.kv", "ring-attention KV chunk between cp ticks"),
     ("cp.ring.state", "SSD entering-state chain message"),
+    ("ep.a2a.tick", "EP dispatch/combine all-to-all ring payload"),
     ("kernel.attention", "attention dispatcher output"),
     ("kernel.expert_gemm", "expert-GEMM dispatcher output"),
     ("kernel.ssd", "SSD-scan dispatcher output"),

@@ -60,6 +60,7 @@ SECTION_CLASSES: Dict[str, str] = {
     "kernel.dispatch": "compute",  # fused-kernel dispatch seam
     "tp.ring": "comm",             # overlap-TP collective-matmul ring
     "cp.ring": "comm",             # context-parallel KV / SSD-state ring
+    "ep.a2a": "comm",              # expert-parallel dispatch/combine a2a ring
     "data.fetch": "host-io",       # host batch synthesis / loading
     "ckpt.persist": "host-io",     # checkpoint snapshot + persist
 }
@@ -73,6 +74,7 @@ SECTION_POINTS: Dict[str, Tuple[str, ...]] = {
                         "kernel.ssd"),
     "tp.ring": ("tp.ring.tick",),
     "cp.ring": ("cp.ring.kv", "cp.ring.state"),
+    "ep.a2a": ("ep.a2a.tick",),
     "data.fetch": ("data.fetch",),
     "ckpt.persist": ("ckpt.persist",),
 }

@@ -327,6 +327,163 @@ def dispatch_expert_gemm(x, w, group_sizes=None, *, impl: str = "auto",
 
 
 # ---------------------------------------------------------------------------
+# EP dispatch/combine all-to-all (expert parallelism, survey §4.1.5)
+
+
+EP_IMPLS = ("auto", "blocking", "overlap")
+
+
+def select_ep_impl(impl: str) -> str:
+    """Resolve ``ParallelPlan.ep_impl`` (survey §4.1.5/§5.2).
+
+    ``"blocking"`` runs one ``lax.all_to_all`` before and one after the
+    expert GEMM — the whole token exchange is exposed on the critical path.
+    ``"overlap"`` decomposes each all-to-all into ``ppermute`` ring ticks
+    interleaved with per-peer expert-GEMM chunks: every tick computes the
+    chunk it already holds while the next is in flight. ``"auto"`` resolves
+    to overlap everywhere — unlike the TP ring (where the gspmd baseline is
+    a different layout), the EP ring is semantically identical to the
+    blocking a2a on every backend, and its ticks compile to async DMAs on
+    TPU.
+    """
+    if impl not in EP_IMPLS:
+        raise ValueError(f"ep_impl must be one of {EP_IMPLS}, got {impl!r}")
+    return "overlap" if impl == "auto" else impl
+
+
+def _ep_a2a_blocking(fn, axis, size, w, h):
+    """GShard-style exposed exchange: dispatch a2a → expert fn → combine a2a.
+
+    Plain traced (autodiff goes straight through ``lax.all_to_all``), so it
+    doubles as the gradient oracle for the custom-VJP overlap ring.
+    """
+    e, c, d = h.shape
+    e_loc = e // size
+    hr = h.reshape(size, e_loc, c, d)
+    hx = taint("ep.a2a.tick", jax.lax.all_to_all(
+        hr, axis, split_axis=0, concat_axis=0, tiled=False))
+    # hx[j] = peer j's token chunk for my local experts; block rows per
+    # source peer so fn sees one (e_loc, size·C, d) buffer
+    hs = hx.transpose(1, 0, 2, 3).reshape(e_loc, size * c, d)
+    y = fn(w, hs)
+    yr = y.reshape(e_loc, size, c, -1).transpose(1, 0, 2, 3)
+    out = jax.lax.all_to_all(yr, axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+    return out.reshape(e, c, out.shape[-1])
+
+
+def _ep_overlap_ticks(fn, axis, size, w, h):
+    """The shared overlap ring schedule: tick t processes the chunk from
+    source peer (r - t) mod N while shipping the next one."""
+    n = size
+    e, c, d = h.shape
+    e_loc = e // n
+    r = jax.lax.axis_index(axis)
+    hr = h.reshape(n, e_loc, c, d)
+    # t = 0: my own chunk, no communication
+    chunk0 = jax.lax.dynamic_slice_in_dim(hr, r, 1, axis=0)[0]
+    y0 = fn(w, chunk0)
+    out = jnp.zeros((n, e_loc, c, y0.shape[-1]), y0.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, y0[None], r, axis=0)
+    for t in range(1, n):
+        perm_t = [(i, (i + t) % n) for i in range(n)]
+        perm_back = [(i, (i - t) % n) for i in range(n)]
+        # ship the chunk destined for peer (r+t); receive, from peer (r-t),
+        # the chunk it dispatched to my experts
+        send = jax.lax.dynamic_slice_in_dim(hr, (r + t) % n, 1, axis=0)[0]
+        recv = taint("ep.a2a.tick",
+                     jax.lax.ppermute(send, axis, perm_t))
+        y = fn(w, recv)
+        # return the result to its source; symmetrically receive my chunk's
+        # result back from peer (r+t)
+        yb = jax.lax.ppermute(y, axis, perm_back)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, yb[None], (r + t) % n, axis=0)
+    return out.reshape(e, c, out.shape[-1])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ep_a2a_overlap(fn, axis, size, w, h):
+    return _ep_overlap_ticks(fn, axis, size, w, h)
+
+
+def _ep_overlap_fwd(fn, axis, size, w, h):
+    out = _ep_overlap_ticks(fn, axis, size, w, h)
+    # residuals are the *inputs* only — the backward re-runs the dispatch
+    # ring to recover the received chunks (remat over the wire, same policy
+    # as the tp/cp rings: keep O(E·C) live, trade a second ring of ticks)
+    return out, (w, h)
+
+
+def _ep_overlap_bwd(fn, axis, size, res, dout):
+    w, h = res
+    n = size
+    e, c, d = h.shape
+    e_loc = e // n
+    r = jax.lax.axis_index(axis)
+    hr = h.reshape(n, e_loc, c, d)
+    dr = dout.reshape(n, e_loc, c, dout.shape[-1])
+
+    # t = 0: my own chunk's VJP, no communication
+    chunk0 = jax.lax.dynamic_slice_in_dim(hr, r, 1, axis=0)[0]
+    dy0 = jax.lax.dynamic_slice_in_dim(dr, r, 1, axis=0)[0]
+    _, vjp = jax.vjp(fn, w, chunk0)
+    dw, dchunk = vjp(dy0)
+    dh = jnp.zeros_like(hr)
+    dh = jax.lax.dynamic_update_slice_in_dim(dh, dchunk[None], r, axis=0)
+    for t in range(1, n):
+        perm_t = [(i, (i + t) % n) for i in range(n)]
+        perm_back = [(i, (i - t) % n) for i in range(n)]
+        # recompute the chunk my experts saw at forward tick t (dispatch
+        # direction), and ship the matching output cotangent the same way:
+        # source (r-t)'s dout slot for peer r travels the t-step ring too
+        recv = jax.lax.ppermute(
+            jax.lax.dynamic_slice_in_dim(hr, (r + t) % n, 1, axis=0)[0],
+            axis, perm_t)
+        dy = jax.lax.ppermute(
+            jax.lax.dynamic_slice_in_dim(dr, (r + t) % n, 1, axis=0)[0],
+            axis, perm_t)
+        _, vjp = jax.vjp(fn, w, recv)
+        dw_t, dchunk = vjp(dy)
+        dw = jax.tree_util.tree_map(jnp.add, dw, dw_t)
+        # dchunk is d/d(source (r-t)'s dispatch buffer for me): ship it back
+        # along the combine direction; receive my own chunk's gradient from
+        # peer (r+t)
+        dback = jax.lax.ppermute(dchunk, axis, perm_back)
+        dh = jax.lax.dynamic_update_slice_in_dim(
+            dh, dback[None], (r + t) % n, axis=0)
+    return dw, dh.reshape(e, c, d)
+
+
+_ep_a2a_overlap.defvjp(_ep_overlap_fwd, _ep_overlap_bwd)
+
+
+def dispatch_ep_a2a(fn, w, h, *, axis, size: int, impl: str = "auto"):
+    """The EP dispatch → expert-compute → combine exchange, one seam.
+
+    ``h``: (E, C, d) per-rank dispatch buffers for all E *global* experts
+    (E divisible by ``size``; each rank owns the e_loc = E/size experts of
+    its ring slot, blocked contiguously). ``fn(w, chunk)`` applies the local
+    experts to a ``(e_loc, C', d)`` row block and must be row-wise (per-row
+    independent, shape-polymorphic in C') so per-peer chunk application
+    equals the concatenated buffer — pass a hashable static callable (e.g. a
+    ``functools.partial`` of a module-level function); it is traced inside a
+    ``custom_vjp`` on the overlap path. ``axis`` is the mesh axis (or axis
+    tuple, for the folded cp×model ring) the exchange runs over. Returns the
+    combined (E, C, f) buffer in dispatch order.
+    """
+    choice = select_ep_impl(impl)
+    if size == 1:
+        return fn(w, h)
+    if h.shape[0] % size:
+        raise ValueError(
+            f"global expert dim {h.shape[0]} must divide ep ring size {size}")
+    if choice == "blocking":
+        return _ep_a2a_blocking(fn, axis, size, w, h)
+    return _ep_a2a_overlap(fn, axis, size, w, h)
+
+
+# ---------------------------------------------------------------------------
 # Mamba2 SSD chunk scan
 
 

@@ -33,13 +33,14 @@ first init, and ONLY the dry-run may see 512 placeholder devices.
 
 def default_plan(arch: str) -> ParallelPlan:
     """The paper-faithful baseline recipe (DESIGN.md §0): TP over ``model``,
-    DP + ZeRO-1 over ``data``, full remat, EP for MoE archs."""
+    DP + ZeRO-1 over ``data``, full remat, EP for MoE archs (folded onto the
+    16-wide tp ring — ``ep`` is a degree now, pinned to cp×tp)."""
     cfg = resolve_config(arch, "train_4k")
     return ParallelPlan(
         tp=16,
         dp_shard=1,
         zero_stage=1,
-        ep=cfg.family == Family.MOE,
+        ep=16 if cfg.family == Family.MOE else 1,
         remat="full",
     )
 
@@ -54,7 +55,7 @@ def plan_from_args(arch: str, args) -> ParallelPlan:
     if args.zero is not None:
         overrides["zero_stage"] = args.zero
     if args.no_ep:
-        overrides["ep"] = False
+        overrides["ep"] = 1
     if args.no_seq_shard:
         overrides["seq_shard_decode"] = False
         overrides["seq_shard_attn"] = False
@@ -64,7 +65,7 @@ def plan_from_args(arch: str, args) -> ParallelPlan:
         overrides["microbatches"] = args.microbatches
     if args.dp_over_model:
         overrides["dp_over_model"] = True
-        overrides["ep"] = False
+        overrides["ep"] = 1
     if args.moe_dispatch:
         overrides["moe_dispatch"] = args.moe_dispatch
     return dataclasses.replace(plan, **overrides) if overrides else plan

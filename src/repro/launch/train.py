@@ -142,15 +142,19 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, "train_4k", smoke=args.smoke)
-    plan = ParallelPlan(remat=args.remat, microbatches=args.microbatches,
-                        compute_dtype="float32" if args.smoke else "bfloat16",
-                        ep=cfg.family == Family.MOE,
-                        integrity=args.integrity)
     shape = InputShape("cli", args.seq, args.batch, "train")
 
     n_dev = len(jax.devices())
     mesh = make_local_mesh() if n_dev > 1 else None
     baxes = batch_axes_for(mesh, args.batch) if mesh else ()
+    # MoE archs ride the local mesh's model axis as an expert ring (ep-only
+    # folding) when the expert count divides it; otherwise dense dispatch
+    ep = (mesh.shape.get("model", 1)
+          if cfg.family == Family.MOE and mesh is not None
+          and cfg.moe.num_experts % mesh.shape.get("model", 1) == 0 else 1)
+    plan = ParallelPlan(remat=args.remat, microbatches=args.microbatches,
+                        compute_dtype="float32" if args.smoke else "bfloat16",
+                        ep=ep, integrity=args.integrity)
     model = build_model(cfg, plan, mesh, baxes)
 
     hyper = Hyper(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),

@@ -1,18 +1,21 @@
 """Mixture-of-Experts layer (survey §4.1.5).
 
-Two execution paths, selectable via :class:`ParallelPlan`:
+This module owns the routing machinery (router, capacity-bounded top-k
+dispatch in both one-hot-einsum and MegaBlocks-style scatter form) and the
+**dense-dispatch** baseline path: GShard-style dispatch/combine with
+sharding left to GSPMD propagation from the expert-weight annotations
+(experts tensor-parallel inside each expert).
 
-- **Dense dispatch** (baseline): GShard-style capacity-bounded one-hot
-  dispatch/combine einsums. Sharding is left to GSPMD propagation from the
-  expert-weight annotations (experts tensor-parallel inside each expert).
-- **Expert parallelism** (``plan.ep``): ``shard_map`` over ("data", "model") with
-  experts owned by ``model``-axis ranks and explicit ``all_to_all`` exchange —
-  the GShard/DeepSpeed-MoE execution model, with the MoE block's tokens
-  additionally sequence-sharded over ``model`` (DeepSpeed-TED-style hybrid) so
-  the all-to-all payload per device stays O(tokens/ (dp·tp)).
-
-Both paths share the router and the capacity/dropping policy, so they are
-numerically interchangeable (tested in tests/test_moe.py).
+Expert parallelism (``plan.ep > 1``) lives in the unified block executor
+(:func:`repro.train.executor.moe_block_ex`): experts shard over the folded
+cp × model expert ring (MoE parallel folding — attention keeps its cp/tp
+mapping while the MoE sublayer re-reads the same devices as one flat expert
+axis) and the dispatch/combine all-to-alls run through
+:func:`repro.kernels.dispatch.dispatch_ep_a2a` (blocking or overlapped ring
+ticks, ``plan.ep_impl``); :func:`ep_chunk_ffn` here is the per-chunk expert
+compute that seam interleaves with the ticks. Both paths share the router
+and the capacity/dropping policy, so they are numerically interchangeable
+at no-drop capacity (tested in tests/test_expert_parallel.py).
 
 DeepSeek-MoE fine-grained features: ``num_shared_experts`` always-on experts.
 """
@@ -176,6 +179,21 @@ def _expert_ffn(w, h, dtype, impl: str = "auto", group_sizes=None):
                                 group_sizes, impl=impl)
 
 
+def ep_chunk_ffn(w, h, *, dtype, impl: str = "auto"):
+    """Per-chunk local-expert SwiGLU for :func:`dispatch_ep_a2a`.
+
+    ``h``: (e_loc, C', d) — one ring tick's row block for this rank's local
+    experts. Row-wise and shape-polymorphic in C' (the overlap seam's
+    contract: per-peer chunk application must equal the concatenated
+    buffer), so no ``group_sizes`` prefix masking — post-a2a rows arrive
+    blocked per source peer, and padding rows are zero and drop out of the
+    GEMMs numerically. Pass via ``functools.partial(ep_chunk_ffn,
+    dtype=..., impl=...)`` so the seam's ``custom_vjp`` sees a static
+    hashable callable.
+    """
+    return _expert_ffn(w, h, dtype, impl, None)
+
+
 # ---------------------------------------------------------------------------
 # dense-dispatch path (baseline)
 
@@ -209,106 +227,15 @@ def moe_dense(p, x, cfg: ModelConfig, dtype, dispatch_mode: str = "einsum",
     return out.reshape(b, s, d), aux
 
 
-# ---------------------------------------------------------------------------
-# expert-parallel path (shard_map + all_to_all)
-#
-# The overlap-TP / context-parallel MoE wiring (ring-gathered routing,
-# d_expert-sharded expert FFN, shard-local routing with batch-global aux)
-# lives in the unified block executor: repro.train.executor.moe_block_ex.
-
-def moe_ep(p, x, cfg: ModelConfig, dtype, mesh, batch_axes,
-           dispatch_mode: str = "einsum", gemm_impl: str = "auto"):
-    """Expert-parallel MoE. x: (B, S, d) with B sharded over ``batch_axes``.
-
-    Inside the shard_map the MoE block's tokens are also sequence-sharded over
-    ``model``; experts live on ``model`` ranks; two all_to_alls move tokens to
-    expert owners and back.
-    """
-    e = cfg.moe
-    tp = mesh.shape["model"]
-    assert e.num_experts % tp == 0
-    e_local = e.num_experts // tp
-
-    baxes = batch_axes if batch_axes else None   # () -> replicated batch
-    pspec_x = P(baxes, "model", None)
-    pspec_params = {
-        "router": P(None, None),
-        "experts": {k: P("model", None, None) for k in ("gate", "up", "down")},
-    }
-    if e.num_shared_experts:
-        pspec_params["shared"] = {"gate": P(None, None), "up": P(None, None),
-                                  "down": P(None, None)}
-
-    def local_moe(pl, xl):
-        # xl: (B_loc, S/tp, d)
-        bl, sl, d = xl.shape
-        xf = xl.reshape(bl * sl, d)
-        n = bl * sl
-        capacity = max(int(n * e.top_k / e.num_experts * e.capacity_factor), 1)
-
-        probs, aux = router_probs(pl, xf, cfg, dtype)
-        if dispatch_mode == "scatter":
-            slot, wts = topk_scatter_dispatch(probs, cfg, capacity)
-            h = _scatter_to_buffers(xf, slot, cfg, capacity)
-        else:
-            dispatch, combine = topk_dispatch(probs, cfg, capacity)
-            # local buffers per (global) expert: (E, C, d)
-            h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
-        # ship expert rows to their owners: split E across model axis
-        h = h.reshape(tp, e_local, capacity, d)
-        h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
-        # h: (tp, e_local, C, d) — rows now from each peer, for MY experts
-        h = h.transpose(1, 0, 2, 3).reshape(e_local, tp * capacity, d)
-        # rows arrive blocked per source peer ([peer0 cap | peer1 cap | ...]),
-        # not compacted, so prefix group_sizes masking doesn't apply here —
-        # padding rows are zero and drop out of the GEMMs numerically
-        h = _expert_ffn(pl["experts"], h, dtype, gemm_impl)
-        # return trip
-        h = h.reshape(e_local, tp, capacity, d).transpose(1, 0, 2, 3)
-        h = jax.lax.all_to_all(h, "model", split_axis=0, concat_axis=0, tiled=False)
-        h = h.reshape(e.num_experts, capacity, d)
-        if dispatch_mode == "scatter":
-            out = _gather_from_buffers(h, slot, wts, dtype)
-        else:
-            out = jnp.einsum("nec,ecd->nd", combine.astype(dtype), h)
-
-        if e.num_shared_experts:
-            sh = jax.nn.silu(xf @ pl["shared"]["gate"].astype(dtype)) * (
-                xf @ pl["shared"]["up"].astype(dtype))
-            out = out + sh @ pl["shared"]["down"].astype(dtype)
-        # aux loss: average over all shards
-        aux = jax.lax.pmean(aux, "model")
-        if batch_axes:
-            aux = jax.lax.pmean(aux, batch_axes)
-        return out.reshape(bl, sl, d), aux
-
-    from repro.core.compat import shard_map  # noqa: PLC0415
-
-    out, aux = shard_map(
-        local_moe, mesh=mesh,
-        in_specs=(pspec_params, pspec_x),
-        out_specs=(pspec_x, P()),
-    )({k: p[k] for k in pspec_params}, x)
-    return out, aux
-
-
 def moe_block(p, x, cfg: ModelConfig, dtype, mesh=None, plan=None, batch_axes=("data",)):
-    """Dispatch between EP and dense paths.
+    """The GSPMD MoE entry point: dense dispatch, layouts by propagation.
 
-    The EP path sequence-shards the MoE block over ``model`` and therefore needs
-    seq % tp == 0; decode steps (S=1) and smoke configs fall back to dense.
+    Expert parallelism no longer routes through here — ``plan.ep > 1``
+    always selects the block-executor loss (``train/executor.moe_block_ex``
+    via ``train/step.py``), where the folded expert ring and the
+    ``dispatch_ep_a2a`` exchange live.
     """
+    del mesh, batch_axes  # GSPMD path: placement comes from annotations
     mode = plan.moe_dispatch if plan is not None else "einsum"
     gemm_impl = plan.moe_gemm_impl if plan is not None else "auto"
-    if (plan is not None and plan.ep and mesh is not None
-            and x.shape[1] % mesh.shape["model"] == 0
-            and x.shape[0] % _axes_size(mesh, batch_axes) == 0):
-        return moe_ep(p, x, cfg, dtype, mesh, batch_axes, mode, gemm_impl)
     return moe_dense(p, x, cfg, dtype, mode, gemm_impl)
-
-
-def _axes_size(mesh, axes) -> int:
-    n = 1
-    for a in (axes if isinstance(axes, tuple) else (axes,)):
-        n *= mesh.shape[a]
-    return n

@@ -72,8 +72,9 @@ from repro.core.config import Family, ModelConfig, ParallelPlan
 from repro.ft.inject import taint
 from repro.kernels.dispatch import (dispatch_attention,
                                     dispatch_attention_chunk_bwd,
-                                    dispatch_attention_lse, dispatch_ssd_scan,
-                                    select_cp_impl)
+                                    dispatch_attention_lse, dispatch_ep_a2a,
+                                    dispatch_ssd_scan, select_cp_impl,
+                                    select_ep_impl)
 from repro.models.layers import NEG_INF, qkv_proj, rms_norm, rope
 from repro.train.tensor_parallel import (RingCtx, all_gather_matmul,
                                          matmul_reduce_scatter,
@@ -91,14 +92,20 @@ class ParallelContext:
 
     ``tp``/``cp`` are the model-axis and context-axis rings (``None`` = that
     axis is off); ``cp_impl`` is the *resolved* attention mode
-    ("gather" | "ring"). ``cx``/``cq``/``ckv`` are the GSPMD activation
-    constrainers of the local mode (identity elsewhere); ``mesh``/
-    ``batch_axes``/``n_dp`` feed the local MoE EP dispatch and the
-    batch-global aux reductions.
+    ("gather" | "ring"). ``ep`` is the folded expert ring of MoE parallel
+    folding: the same cp × model devices re-read as one flat expert axis
+    (``ep.axis`` is an axis *tuple* when both are engaged; in the ep-only
+    placement it is "model" and ``cp`` is the attention ring over that same
+    axis), with ``ep_impl`` the resolved a2a mode ("blocking" | "overlap").
+    ``cx``/``cq``/``ckv`` are the GSPMD activation constrainers of the local
+    mode (identity elsewhere); ``mesh``/``batch_axes``/``n_dp`` feed the
+    batch-global MoE aux reductions.
     """
     tp: Optional[RingCtx] = None
     cp: Optional[RingCtx] = None
     cp_impl: str = "ring"
+    ep: Optional[RingCtx] = None
+    ep_impl: str = "overlap"
     batch_axes: Tuple[str, ...] = ()
     n_dp: int = 1
     mesh: Optional[Mesh] = None
@@ -115,9 +122,23 @@ class ParallelContext:
         return self.cp.size if self.cp is not None else 1
 
     @property
+    def n_ep(self) -> int:
+        return self.ep.size if self.ep is not None else 1
+
+    @property
     def aux_axes(self) -> Tuple[str, ...]:
-        """Axes the MoE aux statistics reduce over (batch-global aux)."""
+        """Axes the MoE aux statistics reduce over (batch-global aux).
+
+        Under EP the router runs shard-local on every fold rank's own
+        sequence chunk, so the statistics reduce over the whole fold (which
+        subsumes the cp axis when engaged); without EP, routing is
+        model-replicated (the tp path re-gathers the sequence) and only the
+        data × cp token sharding needs completing."""
         axes = tuple(self.batch_axes)
+        if self.ep is not None:
+            fold = self.ep.axis if isinstance(self.ep.axis, tuple) \
+                else (self.ep.axis,)
+            return axes + fold
         if self.cp is not None:
             axes = axes + (self.cp.axis,)
         return axes
@@ -125,6 +146,8 @@ class ParallelContext:
     @property
     def n_rep(self) -> int:
         """Token-count multiplier completing local counts to global ones."""
+        if self.ep is not None:
+            return self.n_dp * self.ep.size
         return self.n_dp * self.n_cp
 
 
@@ -527,7 +550,7 @@ def moe_block_ex(ctx: ParallelContext, p, x, cfg: ModelConfig, dtype,
                  plan: Optional[ParallelPlan] = None):
     """MoE block for any placement. x: (B, S_loc, d) -> (out, aux).
 
-    local: delegates to the EP/dense dispatcher (``moe_lib.moe_block``).
+    local: delegates to the dense dispatcher (``moe_lib.moe_block``).
     Sharded: the router sees this (data × cp) shard's token set — under tp a
     ring all-gather re-materializes it once (the GShard cumsum dropping
     policy is order-sensitive, so the model-axis replicas must agree); under
@@ -538,15 +561,52 @@ def moe_block_ex(ctx: ParallelContext, p, x, cfg: ModelConfig, dtype,
     parallel inside each expert when tp is on (d_expert sharded, partials
     psum-completed), full-width otherwise; all three GEMMs keep routing
     through ``dispatch_expert_gemm`` with group_sizes masking.
+
+    ep (``ctx.ep``, MoE parallel folding): the sublayer re-reads the cp ×
+    model devices as one flat expert ring — routing is shard-local on this
+    fold rank's own sequence chunk (**no** tp re-gather; aux statistics psum
+    over the whole fold), each rank owns E/ep complete full-width experts,
+    and the dispatch/combine all-to-alls run through ``dispatch_ep_a2a``
+    (blocking, or ppermute ticks interleaved with per-peer chunk GEMMs —
+    ``ctx.ep_impl``). Post-a2a rows arrive blocked per source peer, so no
+    prefix ``group_sizes`` masking applies — padding rows are zero and drop
+    out of the GEMMs numerically. Shared experts replicate full-width over
+    the fold: every rank routes different tokens, so there is no
+    width-partial psum to complete them.
     """
     from repro.models import moe as moe_lib  # noqa: PLC0415 (import cycle)
-    if ctx.tp is None and ctx.cp is None:
+    if ctx.ep is None and ctx.tp is None and ctx.cp is None:
         return moe_lib.moe_block(p, x, cfg, dtype, ctx.mesh, plan,
                                  ctx.batch_axes)
     e = cfg.moe
     mode = plan.moe_dispatch if plan is not None else "einsum"
     gemm_impl = plan.moe_gemm_impl if plan is not None else "auto"
     b, s_in, d = x.shape
+    if ctx.ep is not None:
+        n = b * s_in
+        xf = x.reshape(n, d)
+        capacity = max(int(n * e.top_k / e.num_experts * e.capacity_factor), 1)
+        probs, aux = moe_lib.router_probs(p, xf, cfg, dtype, ctx.aux_axes,
+                                          ctx.n_rep)
+        if mode == "scatter":
+            slot, wts = moe_lib.topk_scatter_dispatch(probs, cfg, capacity)
+            h = moe_lib._scatter_to_buffers(xf, slot, cfg, capacity)
+        else:
+            dispatch, combine = moe_lib.topk_dispatch(probs, cfg, capacity)
+            h = jnp.einsum("nec,nd->ecd", dispatch.astype(dtype), xf)
+        fn = functools.partial(moe_lib.ep_chunk_ffn, dtype=dtype,
+                               impl=gemm_impl)
+        y = dispatch_ep_a2a(fn, p["experts"], h, axis=ctx.ep.axis,
+                            size=ctx.ep.size, impl=ctx.ep_impl)
+        if mode == "scatter":
+            out = moe_lib._gather_from_buffers(y, slot, wts, dtype)
+        else:
+            out = jnp.einsum("nec,ecd->nd", combine.astype(dtype), y)
+        if e.num_shared_experts:
+            sh = jax.nn.silu(xf @ p["shared"]["gate"].astype(dtype)) * (
+                xf @ p["shared"]["up"].astype(dtype))
+            out = out + sh @ p["shared"]["down"].astype(dtype)
+        return out.reshape(b, s_in, d), aux
     if ctx.tp is not None:
         xg = ring_all_gather(ctx.tp, x)            # (B, S_loc·tp, d)
     else:
@@ -800,14 +860,32 @@ def resolve_context(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         raise ValueError(
             f"plan.cp={plan.cp} needs a 'cp' mesh axis of size {plan.cp}, "
             f"mesh has {mesh.shape}")
-    if plan.ep and (use_tp or cp > 1):
-        # the executor shard_map holds experts dense/d_expert-sharded; the
-        # EP all-to-all lives on the GSPMD loss only — fail loudly rather
-        # than silently dropping the knob ("auto" tp callers fall back to
-        # the GSPMD loss in train.step and keep their EP)
-        raise ValueError(
-            "the executor loss (overlap TP / cp) does not implement expert "
-            "parallelism; use tp_impl='gspmd' to keep plan.ep")
+    use_ep = plan.ep > 1
+    cp_axis = "cp"
+    ep_ctx = None
+    if use_ep:
+        # MoE parallel folding: the expert ring re-reads the devices of the
+        # resolved cp × model placement, so its size is pinned to theirs.
+        if use_tp or cp > 1:
+            fold_axes = (("cp",) if cp > 1 else ()) \
+                + (("model",) if use_tp else ())
+            fold = (cp if cp > 1 else 1) * (tp if use_tp else 1)
+            if plan.ep != fold:
+                raise ValueError(
+                    f"plan.ep={plan.ep} must equal the folded cp×model ring "
+                    f"size {fold} (mesh {dict(mesh.shape)}): the expert axis "
+                    "re-maps those devices, it does not add any")
+        else:
+            # ep-only placement: experts ride the model axis and attention
+            # runs as a cp ring over that same axis (sequence-sharded)
+            if tp != plan.ep:
+                raise ValueError(
+                    f"plan.ep={plan.ep} needs a 'model' mesh axis of exactly "
+                    f"that size to ride (mesh has {dict(mesh.shape)})")
+            fold_axes = ("model",)
+            cp, cp_axis = plan.ep, "model"
+        ep_ctx = RingCtx(fold_axes if len(fold_axes) > 1 else fold_axes[0],
+                         plan.ep)
     if use_tp:
         tplib.check_overlap_support(cfg, plan, tp)
     if cp > 1:
@@ -821,7 +899,7 @@ def resolve_context(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     # here the placement is actually resolved (tp_impl="auto" may have
     # landed on the rings), so re-flag the documented shard-local-routing
     # divergence against the real decision
-    if use_tp or cp > 1:
+    if use_tp or cp > 1 or use_ep:
         from repro.core.config import warn_shard_local_routing  # noqa: PLC0415
         warn_shard_local_routing(cfg)
     n_dp = 1
@@ -829,8 +907,10 @@ def resolve_context(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         n_dp *= mesh.shape[a]
     return ParallelContext(
         tp=RingCtx("model", tp) if use_tp else None,
-        cp=RingCtx("cp", cp) if cp > 1 else None,
-        cp_impl=cp_impl, batch_axes=tuple(batch_axes or ()), n_dp=n_dp,
+        cp=RingCtx(cp_axis, cp) if cp > 1 else None,
+        cp_impl=cp_impl, ep=ep_ctx,
+        ep_impl=select_ep_impl(plan.ep_impl),
+        batch_axes=tuple(batch_axes or ()), n_dp=n_dp,
         mesh=mesh)
 
 
@@ -838,10 +918,23 @@ def executor_param_specs(params, cfg: ModelConfig, plan: ParallelPlan,
                          mesh: Mesh, ctx: ParallelContext):
     """shard_map in_specs for the executor loss: overlap column/row/vocab
     shards when the tp rings are on, fully replicated otherwise (cp shards
-    the sequence, never the weights)."""
+    the sequence, never the weights). Under EP the MoE leaves override to
+    the folded layout (:func:`sharding.ep_spec_for_param` — routed experts
+    expert-dim-sharded over the fold, shared experts/router replicated
+    full-width); non-MoE leaves keep their tp/replicated classification, so
+    attention and MoE genuinely use *different* mappings of the same
+    devices."""
     if ctx.tp is not None:
-        return shardlib.overlap_param_specs(params, cfg, plan, mesh)
-    return jax.tree_util.tree_map(lambda _: P(), params)
+        specs = shardlib.overlap_param_specs(params, cfg, plan, mesh)
+    else:
+        specs = jax.tree_util.tree_map(lambda _: P(), params)
+    if ctx.ep is not None:
+        def override(path, leaf, spec):
+            ep_spec = shardlib.ep_spec_for_param(
+                shardlib._path_names(path), tuple(leaf.shape), plan)
+            return spec if ep_spec is None else ep_spec
+        specs = jax.tree_util.tree_map_with_path(override, params, specs)
+    return specs
 
 
 def make_executor_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
@@ -925,7 +1018,7 @@ def make_executor_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
             assert tokens.shape[1] % (2 * cp if zigzag else cp) == 0, \
                 (tokens.shape, cp)
         pspecs = executor_param_specs(params, cfg, plan, mesh, ctx)
-        seq_ax = "cp" if ctx.cp is not None else None
+        seq_ax = ctx.cp.axis if ctx.cp is not None else None
         v = shard_map(
             local_fn, mesh=mesh,
             in_specs=(pspecs, P(baxes, seq_ax), P(baxes, seq_ax)),

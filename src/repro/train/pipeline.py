@@ -59,6 +59,16 @@ over its own chunk, completed by a cp ``pmean`` (forward) and a 1/cp seed
 split plus all-leaf cp ``psum`` (1F1B backward — params are cp-replicated
 but each rank's backward saw only its chunk).
 
+EP x TP x CP x PP (survey §4.1.5): with ``plan.ep > 1`` the expert ring
+folds onto the cp × model axes inside each stage (MoE parallel folding —
+same devices, different mapping for the MoE sublayer): routed experts shard
+expert-dim over the fold, and the dispatch/combine all-to-alls
+(``kernels.dispatch.dispatch_ep_a2a``, blocking or overlapped per
+``plan.ep_impl``) run inside each tick next to the TP/CP rings. Routed
+expert grads complete locally through the a2a backward (no fold psum);
+shared-expert/router grads psum over the fold. ep-only × pp is rejected —
+there is no spare axis to fold onto.
+
 Uneven stages (survey §8.1, Malleus-style fail-slow mitigation): with
 ``plan.pp_layout = (l_0, ..., l_{P-1})`` (summing to ``n_layers``) stage
 ``i`` holds ``l_i`` layers instead of the even split — the rebalancing
@@ -168,18 +178,18 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         raise ValueError(
             "tp_impl='overlap' was requested explicitly but the pipeline mesh "
             "has no 'model' axis of size >= 2 to run the rings on")
-    # under cp the explicit rings are the ONLY tp execution (validate()
-    # rejects cp x gspmd-tp), so a cp plan with tp > 1 engages them on every
-    # backend — matching executor.resolve_context; without cp, "auto" keeps
-    # its backend resolution (overlap on TPU, gspmd elsewhere)
+    # under cp or ep the explicit rings are the ONLY tp execution (validate()
+    # rejects cp/ep x gspmd-tp), so a cp or ep plan with tp > 1 engages them
+    # on every backend — matching executor.resolve_context; without them,
+    # "auto" keeps its backend resolution (overlap on TPU, gspmd elsewhere)
     tp_overlap = tp > 1 and (
         select_tp_impl(plan.tp_impl) == "overlap"
-        or (plan.cp > 1 and plan.tp > 1))
+        or ((plan.cp > 1 or plan.ep > 1) and plan.tp > 1))
     if tp_overlap:
         try:
             tplib.check_overlap_support(cfg, plan, tp)
         except ValueError:
-            if plan.tp_impl == "overlap":
+            if plan.tp_impl == "overlap" or (plan.ep > 1 and plan.tp > 1):
                 raise
             tp_overlap = False
     # CP x PP (x TP): context parallelism shards the sequence over the "cp"
@@ -199,11 +209,40 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
                                       and cfg.sliding_window)) if cp > 1 \
         else "ring"
     zigzag = cp > 1 and cp_impl == "ring"
+    # EP x PP (x TP x CP): the expert ring folds onto the cp x model axes of
+    # the pipeline mesh exactly as in the flat executor — experts shard over
+    # the fold, the dispatch/combine all-to-alls of dispatch_ep_a2a run
+    # inside each stage tick next to the TP/CP rings. ep-only has no axis to
+    # fold onto here (the executor's ep-only trick repurposes "model" as a
+    # cp ring, which the pipeline's stage buffers don't model), so it is
+    # rejected rather than silently mislaid.
+    ep = plan.ep if plan.ep > 1 else 1
+    if ep > 1:
+        from repro.kernels.dispatch import select_ep_impl
+        from repro.core.sharding import ep_fold_axes, ep_spec_for_param
+        if not (tp_overlap or cp > 1):
+            raise ValueError(
+                f"plan.ep={ep} under pipeline parallelism needs cp > 1 "
+                "and/or the overlap tp rings to fold the expert axis onto; "
+                "ep-only x pp is not supported")
+        fold = (cp if cp > 1 else 1) * (tp if tp_overlap else 1)
+        if ep != fold:
+            raise ValueError(
+                f"plan.ep={ep} must equal the folded cp×model ring size "
+                f"{fold} on the pipeline mesh {dict(mesh.shape)}")
     tp_ctx = tplib.RingCtx("model", tp) if tp_overlap else None
     if tp_overlap or cp > 1:
+        if ep > 1:
+            fold_axes = ep_fold_axes(plan)
+            ep_ctx = tplib.RingCtx(
+                fold_axes if len(fold_axes) > 1 else fold_axes[0], ep)
+            ep_impl = select_ep_impl(plan.ep_impl)
+        else:
+            ep_ctx, ep_impl = None, "overlap"
         ctx = exlib.ParallelContext(
             tp=tp_ctx, cp=tplib.RingCtx("cp", cp) if cp > 1 else None,
-            cp_impl=cp_impl, batch_axes=tuple(batch_axes or ()), n_dp=n_dp)
+            cp_impl=cp_impl, ep=ep_ctx, ep_impl=ep_impl,
+            batch_axes=tuple(batch_axes or ()), n_dp=n_dp)
         layer_fwd = exlib.decoder_layer(ctx, cfg, plan, dtype)
     else:
         ctx = exlib.local_context(batch_axes=tuple(batch_axes or ()))
@@ -215,6 +254,17 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
     def param_specs(params):
         def one(path, leaf):
             names = _names(path)
+            if ep > 1:
+                # MoE leaves override to the folded expert layout: routed
+                # experts expert-dim-sharded over cp x model, shared experts
+                # and router replicated full-width (attention keeps its
+                # tp/replicated classification below)
+                ep_spec = ep_spec_for_param(names, tuple(leaf.shape), plan)
+                if ep_spec is not None:
+                    parts = list(ep_spec)
+                    if "layers" in names:
+                        parts[0] = "pod"
+                    return P(*parts)
             if tp_overlap:
                 from repro.core.sharding import overlap_spec_for_param
                 spec = overlap_spec_for_param(names, tuple(leaf.shape), cfg)
@@ -432,10 +482,25 @@ def pipelined_loss_fn(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh,
         # Under overlap TP, model-replicated leaves (norm scales) saw only
         # this rank's sequence chunk — psum over model completes those.
         def finish(path, g_leaf):
+            names = _names(path)
             if batch_axes:
                 g_leaf = jax.lax.psum(g_leaf, batch_axes)
-            if "layers" not in _names(path):
+            if "layers" not in names:
                 g_leaf = jax.lax.psum(g_leaf, "pod")
+            if ep > 1:
+                ep_spec = ep_spec_for_param(names, tuple(g_leaf.shape), plan)
+                if ep_spec is not None:
+                    if any(ax is not None for ax in ep_spec):
+                        # routed experts: fold-sharded on the expert dim — the
+                        # a2a backward already accumulated every rank's tokens
+                        # into this rank's local-expert dW; a fold psum would
+                        # sum *different experts'* shards element-wise
+                        return g_leaf
+                    # shared experts / router: replicated over the fold but
+                    # each rank's backward saw only its tokens
+                    for a in ep_fold_axes(plan):
+                        g_leaf = jax.lax.psum(g_leaf, a)
+                    return g_leaf
             if cp > 1:
                 # params are replicated over cp but each rank's backward saw
                 # only its sequence chunk — psum completes every leaf

@@ -93,21 +93,27 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
 
 def _overlap_loss_fn(model: Model, plan: ParallelPlan, hyper: Hyper,
                      mesh: Mesh) -> Optional[Callable]:
-    """The executor (overlap-TP and/or context-parallel) loss when the
-    plan/mesh select it, else None (GSPMD loss)."""
+    """The executor (overlap-TP, context-parallel and/or expert-parallel)
+    loss when the plan/mesh select it, else None (GSPMD loss)."""
     from repro.kernels.dispatch import select_tp_impl  # noqa: PLC0415
     use_cp = plan.cp > 1
+    use_ep = plan.ep > 1
     if use_cp and (mesh is None or mesh.shape.get("cp", 1) < plan.cp):
         raise ValueError(
             f"plan.cp={plan.cp} was requested but the step has no 'cp' mesh "
             f"axis of size {plan.cp} to shard the sequence over")
-    if mesh is None or (not use_cp and mesh.shape.get("model", 1) < 2):
+    if use_ep and mesh is None:
+        raise ValueError(
+            f"plan.ep={plan.ep} was requested but the step has no mesh to "
+            "fold the expert ring onto")
+    if mesh is None or (not use_cp and not use_ep
+                        and mesh.shape.get("model", 1) < 2):
         if plan.tp_impl == "overlap":
             raise ValueError(
                 "tp_impl='overlap' was requested explicitly but the step has "
                 "no 'model' mesh axis of size >= 2 to run the rings on")
         return None
-    if not use_cp and select_tp_impl(plan.tp_impl) != "overlap":
+    if not use_cp and not use_ep and select_tp_impl(plan.tp_impl) != "overlap":
         return None
     from repro.train.executor import make_executor_loss_fn  # noqa: PLC0415
     baxes = tuple(a for a in ("pod", "data")
@@ -116,7 +122,7 @@ def _overlap_loss_fn(model: Model, plan: ParallelPlan, hyper: Hyper,
         return make_executor_loss_fn(model.cfg, plan, mesh, baxes,
                                      z_loss=hyper.z_loss)
     except ValueError:
-        if plan.tp_impl == "overlap" or use_cp:
+        if plan.tp_impl == "overlap" or use_cp or use_ep:
             raise                     # explicit request: surface the reason
         return None                   # auto: fall back to the GSPMD loss
 

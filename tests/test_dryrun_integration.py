@@ -16,7 +16,9 @@ from repro.perf.hlo_cost import analyze_hlo
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 arch = "{arch}"
 cfg = resolve_config(arch, "train_4k", smoke=True)
-plan = ParallelPlan(remat="full", ep=cfg.family == Family.MOE)
+# MoE archs fold the expert ring onto the 4-wide model axis (ep is a
+# degree now; the old ep=True/False bool is rejected by validate())
+plan = ParallelPlan(remat="full", ep=4 if cfg.family == Family.MOE else 1)
 
 # patch a reduced shape in place of the production ones
 import repro.core.config as cc

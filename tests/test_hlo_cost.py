@@ -82,6 +82,55 @@ print("collectives:", {k: v for k, v in a.collective_counts.items() if v})
 """)
 
 
+def test_all_to_all_pricing_formula():
+    """all-to-all link bytes follow the ring model — (n-1)/n of the result
+    bytes, with the async ``-start`` form halved (its tuple result carries
+    operand + destination buffers) and the ``-done`` marker free."""
+    txt = """
+HloModule m
+
+ENTRY %main (p0: f32[4,64]) -> f32[4,64] {
+  %p0 = f32[4,64]{1,0} parameter(0)
+  %a2a = f32[4,64]{1,0} all-to-all(f32[4,64]{1,0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %a2as = (f32[4,64]{1,0}, f32[4,64]{1,0}) all-to-all-start(f32[4,64]{1,0} %a2a), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  ROOT %a2ad = f32[4,64]{1,0} all-to-all-done((f32[4,64]{1,0}, f32[4,64]{1,0}) %a2as)
+}
+"""
+    a = analyze_hlo(txt, 8)
+    # f32[4,64] = 1024 B in groups of 4 -> 3/4 * 1024 = 768 per exchange;
+    # the -start tuple (2048 B) halves back to one 1024 B payload
+    assert a.collective_counts["all-to-all"] == 2, a.collective_counts
+    assert a.collective_bytes_by_kind["all-to-all"] == 768.0 * 2
+    assert a.collective_link_bytes == 768.0 * 2
+
+
+def test_all_to_all_priced_from_lowered(multidevice):
+    """The EP dispatch exchange as XLA actually lowers it (variadic tuple
+    all-to-all under shard_map) is recognized and priced at (n-1)/n of the
+    tuple total."""
+    multidevice("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.perf.hlo_cost import analyze_hlo
+
+mesh = jax.make_mesh((8,), ("model",))
+
+def body(x):
+    return jax.lax.all_to_all(x, "model", split_axis=0, concat_axis=0,
+                              tiled=False)
+
+f = shard_map(body, mesh, in_specs=P(None, "model"), out_specs=P(None, "model"))
+x = jax.ShapeDtypeStruct((8, 64, 32), jnp.float32)
+a = analyze_hlo(jax.jit(f).lower(x).compile().as_text(), 8)
+assert a.collective_counts["all-to-all"] == 1, a.collective_counts
+# 8 pieces of f32[1,8,32] (1024 B each) -> 7/8 * 8192 = 7168 link bytes
+assert a.collective_bytes_by_kind["all-to-all"] == 7.0 / 8.0 * 8 * 1024, \\
+    a.collective_bytes_by_kind
+print("a2a priced:", a.collective_bytes_by_kind["all-to-all"])
+""")
+
+
 def test_model_flops_for_shapes():
     cfg = ModelConfig("t", Family.DENSE, n_layers=2, d_model=64, n_heads=4,
                       n_kv_heads=4, d_ff=128, vocab=256)

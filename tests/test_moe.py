@@ -1,4 +1,8 @@
-"""MoE routing/dispatch invariants + dense-vs-EP equivalence (multi-device)."""
+"""MoE routing/dispatch invariants (single-device).
+
+Expert-parallel equivalence (executor EP route, overlap vs blocking vs
+dense routing) lives in tests/test_expert_parallel.py.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -91,28 +95,3 @@ def test_scatter_dispatch_matches_einsum(seed, cap):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                atol=1e-6)
     assert abs(float(aux_a) - float(aux_b)) < 1e-7
-
-
-def test_moe_ep_matches_dense(multidevice):
-    """Expert-parallel (shard_map all_to_all) == dense dispatch, on 8 devices."""
-    multidevice("""
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import Family, ModelConfig, MoEConfig, ParallelPlan
-from repro.models.moe import init_moe, moe_dense, moe_ep
-
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-cfg = ModelConfig("t", Family.MOE, n_layers=1, d_model=16, n_heads=2,
-                  n_kv_heads=2, d_ff=0, vocab=64,
-                  moe=MoEConfig(num_experts=8, top_k=2, d_expert=8,
-                                capacity_factor=8.0, num_shared_experts=1))
-p = init_moe(jax.random.PRNGKey(0), cfg)
-x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 8, 16)), jnp.float32)
-dense, aux_d = moe_dense(p, x, cfg, jnp.float32)
-ep, aux_e = moe_ep(p, x, cfg, jnp.float32, mesh, ("data",))
-err = float(jnp.abs(dense - ep).max())
-print("max err", err, "aux", float(aux_d), float(aux_e))
-assert err < 1e-4, err
-# aux loss is computed per shard then averaged (standard DP-MoE semantics) —
-# not bit-equal to the global-batch loss, but must be the same scale
-assert abs(float(aux_d) - float(aux_e)) < 0.5 * float(aux_d) + 1e-3
-""")

@@ -8,7 +8,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import ModelConfig, ParallelPlan, Family, get_smoke_config
 from repro.core.sharding import (
-    bytes_per_device, cache_specs, opt_state_specs, param_specs, spec_for_param,
+    bytes_per_device, cache_specs, ep_spec_for_param, opt_state_specs,
+    param_specs, spec_for_param,
 )
 
 
@@ -54,14 +55,23 @@ def test_fsdp_factor_adds_data_axis():
 
 def test_expert_sharding_ep_vs_tp():
     cfg = ModelConfig("t", Family.MOE, 2, 1024, 8, 8, 0, 32000)
-    ep = ParallelPlan(ep=True)
-    s = spec_for_param(("layers", "moe", "experts", "gate"), (2, 64, 1024, 512),
-                       cfg, ep, MESH)
-    assert s == P(None, "model", None, None)      # expert dim
-    tp = ParallelPlan(ep=False)
-    s = spec_for_param(("layers", "moe", "experts", "gate"), (2, 64, 1024, 512),
-                       cfg, tp, MESH)
-    assert s == P(None, None, None, "model")      # d_expert dim
+    path, shape = ("layers", "moe", "experts", "gate"), (2, 64, 1024, 512)
+    # without EP, experts are just column weights: d_expert dim over "model"
+    assert spec_for_param(path, shape, cfg, ParallelPlan(), MESH) \
+        == P(None, None, None, "model")
+    # integer-degree EP places experts via ep_spec_for_param: the expert dim
+    # shards over the folded ring, d_expert stays full per fold rank
+    assert ep_spec_for_param(path, shape, ParallelPlan(ep=16)) \
+        == P(None, "model", None, None)
+    assert ep_spec_for_param(
+        path, shape, ParallelPlan(ep=16, tp=4, cp=4, tp_impl="overlap")) \
+        == P(None, ("cp", "model"), None, None)
+    # the GSPMD placement (init/restore) agrees: expert dim over the fold
+    # when it divides, d_expert TP fallback when it doesn't
+    assert spec_for_param(path, shape, cfg, ParallelPlan(ep=16), MESH) \
+        == P(None, "model", None, None)
+    assert spec_for_param(path, (2, 12, 1024, 512), cfg, ParallelPlan(ep=16),
+                          MESH) == P(None, None, None, "model")
 
 
 def test_dp_over_model_remap():
